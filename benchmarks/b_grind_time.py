@@ -1,0 +1,56 @@
+"""Paper Table I / Fig. 4 — grind time (katom-steps/s) per implementation.
+
+The paper's figure of merit: force-evaluation throughput for the 2J8 and
+2J14 problems (2000 atoms, 26 neighbors on V100).  This container is
+CPU-only so absolute numbers are not comparable to Table I; what IS
+comparable — and reported — is the *relative* speedup of the adjoint
+refactorization over the baseline formulation on identical hardware
+(paper: the baseline-to-final path is ~22x on GPU; the algorithmic part of
+that — adjoint + fused dE, minus the GPU-specific memory coalescing — is
+what a CPU backend can express).
+
+Emits CSV rows: name, us_per_call, derived(katom_steps_per_s | speedup).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, snap_problem, time_fn
+
+
+def run(quick=True):
+    natoms = 512 if quick else 2000
+    sizes = [(8, natoms), (14, natoms if quick else 2000)]
+    if quick:
+        sizes[1] = (14, 256)
+    results = {}
+    for twojmax, n in sizes:
+        cfg, beta, disp, nbr_idx, mask = snap_problem(n, twojmax)
+        n = disp.shape[0]
+        beta = jnp.asarray(beta)
+        args = (disp[..., 0], disp[..., 1], disp[..., 2], nbr_idx, mask)
+
+        from repro.core.snap import (energy_forces_adjoint,
+                                     energy_forces_baseline)
+        base = jax.jit(lambda *a: energy_forces_baseline(
+            cfg, beta, 0.0, *a)[2])
+        adj = jax.jit(lambda *a: energy_forces_adjoint(
+            cfg, beta, 0.0, *a)[2])
+        t_base = time_fn(base, *args)
+        t_adj = time_fn(adj, *args)
+        ka_base = n / t_base / 1e3
+        ka_adj = n / t_adj / 1e3
+        emit(f'grind_baseline_2J{twojmax}_N{n}', t_base,
+             f'{ka_base:.2f}katom-steps/s')
+        emit(f'grind_adjoint_2J{twojmax}_N{n}', t_adj,
+             f'{ka_adj:.2f}katom-steps/s')
+        emit(f'speedup_adjoint_over_baseline_2J{twojmax}', 0.0,
+             f'{t_base / t_adj:.2f}x')
+        results[twojmax] = (t_base, t_adj)
+    return results
+
+
+if __name__ == '__main__':
+    run()

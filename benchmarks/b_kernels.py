@@ -1,0 +1,63 @@
+"""Sec. VI kernel benchmarks: Pallas (interpret-mode) vs pure-jnp stage
+implementations at matched sizes.
+
+NOTE interpret mode runs the kernel body as Python/jnp per grid step — the
+numbers here validate plumbing overheads and give the VMEM working-set
+accounting; real speedups require TPU hardware.  Emitted for completeness
+and tracked so a hardware run can diff against the same harness.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, snap_problem, time_fn
+
+
+def run(quick=True):
+    natoms = 128
+    twojmax = 8
+    cfg, beta, disp, nbr_idx, mask = snap_problem(natoms, twojmax)
+    beta = jnp.asarray(beta)
+    idx = cfg.index
+    from repro.core import bispectrum as bs
+    from repro.core.snap import _pair_geometry
+    from repro.core.ulist import compute_ulist, compute_ulisttot
+    from repro.kernels.ops import (snap_dedr_kernel, snap_ui_kernel)
+
+    dx, dy, dz = (jnp.asarray(disp[..., i]) for i in range(3))
+    maskj = jnp.asarray(mask)
+
+    ui_k = jax.jit(lambda: snap_ui_kernel(cfg, dx, dy, dz, maskj,
+                                          dtype=jnp.float32,
+                                          interpret=True))
+    t_uk = time_fn(lambda: ui_k())
+    geom, _, ok = _pair_geometry(cfg, dx, dy, dz, maskj, grad=False)
+    ui_r = jax.jit(lambda: compute_ulisttot(
+        compute_ulist(geom, idx, jnp.float32), geom.sfac, ok, idx))
+    t_ur = time_fn(lambda: ui_r())
+    emit(f'kernel_snap_u_pallas_interp_2J{twojmax}_N{natoms}', t_uk, '')
+    emit(f'kernel_snap_u_jnp_2J{twojmax}_N{natoms}', t_ur, '')
+
+    ut = ui_r()
+    y = bs.compute_ylist(ut, beta, idx)
+    de_k = jax.jit(lambda y: snap_dedr_kernel(cfg, dx, dy, dz, maskj, y,
+                                              dtype=jnp.float32,
+                                              interpret=True))
+    t_dek = time_fn(de_k, y)
+    emit(f'kernel_fused_de_pallas_interp_2J{twojmax}_N{natoms}', t_dek, '')
+
+    # VMEM working-set accounting (the paper's occupancy argument, Sec VI)
+    iu = idx.idxu_max
+    vmem = (26 * 4 * 128 * 4          # disp block
+            + 2 * iu * 128 * 4        # ulisttot out planes
+            + 4 * (twojmax + 1) ** 2 * 128 * 4)   # live recursion levels
+    emit(f'kernel_snap_u_vmem_per_block_2J{twojmax}', 0.0,
+         f'{vmem / 1e6:.2f}MB_of_128MB')
+    return True
+
+
+if __name__ == '__main__':
+    run()

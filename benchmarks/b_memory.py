@@ -1,0 +1,94 @@
+"""Paper Fig. 1 + Sec. VI-C — memory footprints of each formulation.
+
+Analytic (array shapes x element sizes), so exactly reproducible off-GPU.
+
+Formulations, matching the paper's narrative:
+- ``pre_adjoint_dense``: the TestSNAP atom+neighbor-parallel version of
+  Fig. 1 — *unflattened jagged arrays*: U/dU indexed [j][ma][mb] as dense
+  (2J+1)^3 cubes per pair, Z as a dense (2J+1)^5 block per atom.  This is
+  what produced 5 GB @ 2J8 and the OOM (>16 GB) @ 2J14 on a V100-16GB.
+- ``pre_adjoint_flat``: same algorithm with flattened index lists
+  (the paper's "flattened jagged multi-dimensional arrays" note).
+- ``adjoint``: Sec. IV — Z and dB eliminated, Y added.
+- ``fused``: Sec. VI kernels — per-pair state lives in VMEM only; HBM
+  holds Ulisttot + Ylist + dE (paper: 0.1 GB @ 2J8, 0.9 GB @ 2J14).
+
+Emits bytes per formulation and asserts the paper's OOM boundary.
+"""
+
+from __future__ import annotations
+
+from repro.core.indices import build_index
+from .common import emit
+
+C128 = 16   # complex double
+F64 = 8
+
+
+def footprint(twojmax: int, natoms: int = 2000, nnbor: int = 26):
+    idx = build_index(twojmax)
+    P = natoms * nnbor
+    iu, iz, ib = idx.idxu_max, idx.idxz_max, idx.idxb_max
+    J1 = twojmax + 1
+    cube = J1 ** 3            # dense jagged U storage [j][ma][mb]
+    z5 = J1 ** 5              # dense jagged Z storage [j1][j2][j][ma][mb]
+    pre_dense = dict(
+        ulist=P * cube * C128,
+        dulist=P * 3 * cube * C128,
+        zlist=natoms * z5 * C128,
+        dblist=P * 3 * cube * F64,
+        ulisttot=natoms * cube * C128,
+    )
+    pre_flat = dict(
+        ulist=P * iu * C128,
+        dulist=P * 3 * iu * C128,
+        zlist=natoms * iz * C128,
+        dblist=P * 3 * ib * F64,
+        ulisttot=natoms * iu * C128,
+    )
+    adjoint = dict(
+        ulist=P * iu * C128,
+        dulist=P * 3 * iu * C128,
+        ylist=natoms * iu * C128,
+        ulisttot=natoms * iu * C128,
+        dedr=P * 3 * F64,
+    )
+    fused = dict(   # Pallas kernels: per-pair state stays in VMEM
+        ulisttot=natoms * iu * C128 // 2,   # fp32 re/im planes
+        ylist=natoms * iu * C128 // 2,
+        dedr=P * 3 * F64 // 2,
+    )
+    return {k: sum(v.values()) for k, v in
+            dict(pre_adjoint_dense=pre_dense, pre_adjoint_flat=pre_flat,
+                 adjoint=adjoint, fused=fused).items()}
+
+
+PAPER = {   # GB, from Fig. 1 and Sec. VI-C
+    (8, 'pre_adjoint_dense'): 5.0,
+    (14, 'pre_adjoint_dense'): 16.0,      # ">16GB": OOM on V100-16GB
+    (8, 'fused'): 0.1,
+    (14, 'fused'): 0.9,
+}
+
+
+def run(quick=True):
+    for twojmax in (8, 14):
+        fp = footprint(twojmax)
+        for name, b in fp.items():
+            ref = PAPER.get((twojmax, name))
+            note = f'paper~{ref}GB' if ref else ''
+            emit(f'mem_{name}_2J{twojmax}', 0.0,
+                 f'{b / 1e9:.3f}GB{"_" + note if note else ""}')
+        if twojmax == 14:
+            assert fp['pre_adjoint_dense'] > 16e9, \
+                'paper reproduction: 2J14 dense pre-adjoint must OOM a V100'
+            assert fp['fused'] < 1.5e9, \
+                'paper reproduction: fused 2J14 fits in ~0.9GB'
+        if twojmax == 8:
+            assert 3e9 < fp['pre_adjoint_dense'] < 8e9, \
+                'paper reproduction: 2J8 dense pre-adjoint ~5GB'
+    return True
+
+
+if __name__ == '__main__':
+    run()

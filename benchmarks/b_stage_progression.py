@@ -1,0 +1,84 @@
+"""Paper Figs. 2/3 + Sec. VI per-kernel speedups — stage-level timing.
+
+The paper reports per-kernel improvements along its optimization path
+(V1..V7, then the Sec. VI shared-memory kernels: compute_U 5.2x/4.9x,
+compute_fused_dE 3.3x/5.0x, compute_Y AoSoA 1.4x).  GPU-occupancy stages
+(V3/V4 coalescing, V7 128-bit loads) have no CPU analogue — what this
+harness measures is the *algorithmic* stage structure shared by both
+machines:
+
+  stage U   : per-pair Wigner recursion + neighbor accumulation
+  stage Z|Y : Clebsch-Gordan products (baseline Z vs adjoint Y)
+  stage dU+dB|fused dE : derivative pipeline (baseline dU->dB vs
+                         adjoint fused contraction)
+
+Emits per-stage times for the baseline and adjoint formulations and the
+stage-by-stage ratio — the CPU-measurable projection of Figs. 2/3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, snap_problem, time_fn
+
+
+def run(quick=True):
+    for twojmax in (8,) if quick else (8, 14):
+        cfg, beta, disp, nbr_idx, mask = snap_problem(
+            512 if quick else 2000, twojmax)
+        natoms = disp.shape[0]
+        beta = jnp.asarray(beta)
+        idx = cfg.index
+        dx, dy, dz = (jnp.asarray(disp[..., i]) for i in range(3))
+        maskj = jnp.asarray(mask)
+
+        from repro.core import bispectrum as bs
+        from repro.core.snap import _pair_geometry
+        from repro.core.ulist import (compute_dulist, compute_ulist,
+                                      compute_ulisttot)
+
+        geom, dgeom, ok = _pair_geometry(cfg, dx, dy, dz, maskj, grad=True)
+
+        u_fn = jax.jit(lambda: compute_ulisttot(
+            compute_ulist(geom, idx, cfg.dtype), geom.sfac, ok, idx))
+        ut = u_fn()
+        t_u = time_fn(lambda: u_fn())
+        emit(f'stage_U_2J{twojmax}', t_u, '')
+
+        z_fn = jax.jit(lambda ut: bs.compute_zlist(ut, idx))
+        t_z = time_fn(z_fn, ut)
+        y_fn = jax.jit(lambda ut: bs.compute_ylist(ut, beta, idx))
+        t_y = time_fn(y_fn, ut)
+        y = y_fn(ut)
+        emit(f'stage_Z_baseline_2J{twojmax}', t_z, '')
+        emit(f'stage_Y_adjoint_2J{twojmax}', t_y,
+             f'{t_z / t_y:.2f}x_vs_Z')
+
+        du_fn = jax.jit(lambda: compute_dulist(geom, dgeom, idx,
+                                               cfg.dtype)[1])
+        du = du_fn()
+        t_du = time_fn(lambda: du_fn())
+        atom_of_pair = jnp.repeat(jnp.arange(natoms), disp.shape[1])
+        z = z_fn(ut)
+        db_fn = jax.jit(lambda du, z: bs.compute_dblist(
+            du.reshape(-1, 3, idx.idxu_max), z, atom_of_pair, idx))
+        t_db = time_fn(db_fn, du, z)
+        de_fn = jax.jit(lambda du, y: bs.compute_dedr(
+            du.reshape(-1, 3, idx.idxu_max), y, atom_of_pair, idx))
+        t_de = time_fn(de_fn, du, y)
+        emit(f'stage_dU_2J{twojmax}', t_du, '')
+        emit(f'stage_dB_baseline_2J{twojmax}', t_db, '')
+        emit(f'stage_dE_adjoint_2J{twojmax}', t_de,
+             f'{t_db / t_de:.2f}x_vs_dB')
+        emit(f'stage_total_baseline_2J{twojmax}',
+             t_u + t_z + t_du + t_db, '')
+        emit(f'stage_total_adjoint_2J{twojmax}', t_u + t_y + t_du + t_de,
+             f'{(t_u + t_z + t_du + t_db) / (t_u + t_y + t_du + t_de):.2f}'
+             'x_overall')
+    return True
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing, problem setup, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Median wall-clock seconds per call (jit-compiled fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def snap_problem(natoms, twojmax, rcut=4.7, nnbor=26):
+    """The paper's benchmark geometry: bcc W, ~26 neighbors/atom."""
+    from repro.core.snap import SnapConfig
+    from repro.md.lattice import paper_box, perturb
+    from repro.md.neighbor import brute_neighbors
+    cfg = SnapConfig(twojmax=twojmax, rcut=rcut)
+    pos, box = paper_box(natoms=natoms)
+    pos = perturb(pos, 0.03, seed=0)
+    nbr_idx, mask, disp, _ = brute_neighbors(pos, box, rcut,
+                                             max_nbors=nnbor)
+    rng = np.random.default_rng(0)
+    beta = np.asarray(rng.normal(size=cfg.ncoeff) * 1e-2)
+    return cfg, beta, disp, nbr_idx, mask
+
+
+def emit(name, seconds, derived=''):
+    us = seconds * 1e6
+    print(f'{name},{us:.1f},{derived}')

@@ -1,0 +1,66 @@
+"""Before/after comparison of two dry-run sweeps (§Perf evidence).
+
+    PYTHONPATH=src python -m benchmarks.compare_sweeps \
+        experiments/dryrun experiments/dryrun_v2
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from .roofline import analyze, fmt_s, load_cells, SHAPES
+
+
+def compare(before_dir, after_dir, mesh='single', out=None):
+    b = load_cells(before_dir)
+    a = load_cells(after_dir)
+    from repro.configs import ARCHS
+    rows = ['| arch | shape | term | before | after | change |',
+            '|---|---|---|---|---|---|']
+    improvements = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rb = b.get((arch, shape, mesh))
+            ra = a.get((arch, shape, mesh))
+            if not rb or not ra or rb['status'] != 'ok' \
+                    or ra['status'] != 'ok':
+                continue
+            ab = analyze(rb, arch, shape)
+            aa = analyze(ra, arch, shape)
+            if ab['status'] != 'ok' or aa['status'] != 'ok':
+                continue
+            for term in ('t_compute', 't_memory', 't_collective'):
+                vb, va = ab[term], aa[term]
+                if vb <= 0 or abs(vb - va) / max(vb, 1e-12) < 0.05:
+                    continue
+                ratio = vb / max(va, 1e-12)
+                rows.append(
+                    f'| {arch} | {shape} | {term[2:]} | {fmt_s(vb)} | '
+                    f'{fmt_s(va)} | {ratio:.2f}x |')
+                improvements.append(((arch, shape, term), ratio))
+            hb, ha = ab['hbm_gb'], aa['hbm_gb']
+            if abs(hb - ha) / max(hb, 1e-9) > 0.05:
+                rows.append(
+                    f'| {arch} | {shape} | HBM/chip | {hb:.1f}GB | '
+                    f'{ha:.1f}GB | {hb / max(ha, 1e-9):.2f}x |')
+            if ab['fits'] != aa['fits']:
+                rows.append(
+                    f'| {arch} | {shape} | fits 16GB | '
+                    f'{"Y" if ab["fits"] else "NO"} | '
+                    f'{"Y" if aa["fits"] else "NO"} |  |')
+            fb, fa = ab['roofline_fraction'], aa['roofline_fraction']
+            if abs(fb - fa) / max(fb, 1e-9) > 0.05:
+                rows.append(
+                    f'| {arch} | {shape} | roofline-frac | {fb:.2%} | '
+                    f'{fa:.2%} | {fa / max(fb, 1e-12):.2f}x |')
+    text = '\n'.join(rows)
+    if out:
+        Path(out).write_text(text + '\n')
+    return text
+
+
+if __name__ == '__main__':
+    before = sys.argv[1] if len(sys.argv) > 1 else 'experiments/dryrun'
+    after = sys.argv[2] if len(sys.argv) > 2 else 'experiments/dryrun_v2'
+    print(compare(before, after, out='experiments/perf_comparison.md'))

@@ -1,0 +1,194 @@
+"""Roofline report generator — reads experiments/dryrun/*.json and emits
+the per-(arch x shape x mesh) three-term roofline table.
+
+Hardware model (TPU v5e):
+    peak_flops = 197 TFLOP/s bf16 per chip
+    hbm_bw     = 819 GB/s per chip
+    link_bw    = ~50 GB/s per ICI link
+
+Terms (seconds, per step, per chip — the SPMD program is per-device):
+    compute    = corrected_HLO_flops / peak_flops
+    memory     = corrected_HLO_bytes / hbm_bw
+    collective = corrected_collective_bytes / link_bw
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (prefill) / 2 N B (decode), with N =
+active matmul parameters (MoE: experts scaled by top_k/n_experts).
+roofline fraction = ideal compute time of MODEL_FLOPS / dominant term —
+an upper bound on achievable MFU under this lowering.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_CAP = 16e9
+
+SHAPES = {
+    'train_4k': dict(seq=4096, batch=256, kind='train'),
+    'prefill_32k': dict(seq=32768, batch=32, kind='prefill'),
+    'decode_32k': dict(seq=32768, batch=128, kind='decode'),
+    'long_500k': dict(seq=524288, batch=1, kind='decode'),
+}
+
+
+def matmul_params(arch: str):
+    """Active / total matmul-participating parameter counts."""
+    from repro.configs import get_config
+    from repro.models.specs import params_specs
+    import jax
+    cfg = get_config(arch)
+    tree = params_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    total = active = 0
+    moe_scale = (cfg.top_k / cfg.n_experts) if cfg.n_experts else 1.0
+    for path, leaf in flat:
+        name = str(path[-1])
+        n = int(np.prod(leaf.shape))
+        if leaf.ndim < 2:
+            continue
+        is_expert = any(f"'{k}'" in str(p) for p in path
+                        for k in ('e_in', 'e_gate', 'e_out'))
+        total += n
+        active += int(n * (moe_scale if is_expert else 1.0))
+    return active, total, cfg
+
+
+def model_flops(arch: str, shape: str):
+    active, total, cfg = matmul_params(arch)
+    s = SHAPES[shape]
+    tokens = s['seq'] * s['batch']
+    if s['kind'] == 'train':
+        return 6.0 * active * tokens
+    if s['kind'] == 'prefill':
+        return 2.0 * active * tokens
+    return 2.0 * active * s['batch']          # decode: one token per row
+
+
+def decode_min_bytes(arch: str, shape: str):
+    """Irreducible per-step HBM traffic for a decode cell: every active
+    parameter (bf16 at rest) + the full valid cache, read once."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models.specs import input_specs
+    active, total, cfg = matmul_params(arch)
+    specs = input_specs(get_config(arch), shape)
+    if specs is None or 'cache' not in specs:
+        return None
+    cache_bytes = sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                      for x in jax.tree.leaves(specs['cache']))
+    return 2 * active + cache_bytes
+
+
+def load_cells(dryrun_dir):
+    cells = {}
+    for f in sorted(Path(dryrun_dir).glob('*.json')):
+        rec = json.loads(f.read_text())
+        arch, shape, mesh = f.stem.split('__')
+        cells[(arch, shape, mesh)] = rec
+    return cells
+
+
+def analyze(rec, arch, shape):
+    if rec['status'] != 'ok':
+        return dict(status=rec['status'],
+                    reason=rec.get('reason', '')[:60])
+    hc = rec.get('hlo_cost')
+    if not hc:
+        return dict(status='no-hlo-cost')
+    n_dev = rec['n_devices']
+    t_c = hc['flops'] / PEAK_FLOPS
+    t_m = hc['hbm_bytes'] / HBM_BW
+    t_x = hc['collective_bytes'] / LINK_BW
+    dominant = max((t_c, 'compute'), (t_m, 'memory'),
+                   (t_x, 'collective'))
+    mf = model_flops(arch, shape)
+    hlo_global = hc['flops'] * n_dev
+    ideal = mf / n_dev / PEAK_FLOPS
+    if rec.get('kind') == 'decode':
+        # decode is irreducibly memory-bound: ideal = min traffic time
+        mb = decode_min_bytes(arch, shape)
+        if mb:
+            ideal = max(ideal, mb / n_dev / HBM_BW)
+    frac = ideal / dominant[0] if dominant[0] > 0 else 0.0
+    mem = rec.get('memory', {})
+    resident = (mem.get('argument_size_in_bytes', 0)
+                + mem.get('temp_size_in_bytes', 0)
+                - mem.get('alias_size_in_bytes', 0))
+    return dict(status='ok', t_compute=t_c, t_memory=t_m,
+                t_collective=t_x, dominant=dominant[1],
+                model_flops=mf, hlo_flops_global=hlo_global,
+                useful_ratio=mf / hlo_global if hlo_global else 0.0,
+                roofline_fraction=frac,
+                hbm_gb=resident / 1e9, fits=resident < HBM_CAP,
+                compile_s=rec.get('compile_s'))
+
+
+def fmt_s(t):
+    if t >= 1:
+        return f'{t:.2f}s'
+    if t >= 1e-3:
+        return f'{t * 1e3:.1f}ms'
+    return f'{t * 1e6:.0f}us'
+
+
+def report(dryrun_dir='experiments/dryrun', mesh='single', out=None):
+    cells = load_cells(dryrun_dir)
+    rows = []
+    header = ('| arch | shape | compute | memory | collective | bound | '
+              'model/HLO | roofline-frac | HBM/chip | fits |')
+    rows.append(header)
+    rows.append('|' + '---|' * 10)
+    from repro.configs import ARCHS
+    summary = {}
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = cells.get((arch, shape, mesh))
+            if rec is None:
+                rows.append(f'| {arch} | {shape} | (missing) |' + ' |' * 7)
+                continue
+            a = analyze(rec, arch, shape)
+            if a['status'] != 'ok':
+                rows.append(f'| {arch} | {shape} | SKIP: '
+                            f'{a.get("reason", a["status"])} |' + ' |' * 7)
+                continue
+            summary[(arch, shape)] = a
+            rows.append(
+                f'| {arch} | {shape} | {fmt_s(a["t_compute"])} | '
+                f'{fmt_s(a["t_memory"])} | {fmt_s(a["t_collective"])} | '
+                f'{a["dominant"]} | {a["useful_ratio"]:.2f} | '
+                f'{a["roofline_fraction"]:.2%} | {a["hbm_gb"]:.1f}GB | '
+                f'{"Y" if a["fits"] else "NO"} |')
+    text = '\n'.join(rows)
+    if out:
+        Path(out).write_text(text + '\n')
+    return text, summary
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else 'single'
+    text, summary = report(mesh=mesh, out=f'experiments/roofline_{mesh}.md')
+    print(text)
+    if summary:
+        worst = sorted(summary.items(),
+                       key=lambda kv: kv[1]['roofline_fraction'])[:5]
+        print('\nworst roofline fractions:')
+        for (arch, shape), a in worst:
+            print(f'  {arch} x {shape}: {a["roofline_fraction"]:.2%} '
+                  f'({a["dominant"]}-bound)')
+        coll = sorted(summary.items(),
+                      key=lambda kv: -kv[1]['t_collective'])[:5]
+        print('most collective-heavy:')
+        for (arch, shape), a in coll:
+            print(f'  {arch} x {shape}: {fmt_s(a["t_collective"])}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Fit SNAP coefficients to reference data (the "machine-learned" part).
+
+Generates reference energies/forces from a known SNAP model (self-consistency
+fit — recovers the generating coefficients), then refits from scratch using
+energy+force weighted linear least squares, FitSNAP-style.
+
+    PYTHONPATH=src python examples/fit_snap.py
+"""
+import jax
+
+jax.config.update('jax_enable_x64', True)
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.snap import SnapConfig, energy_forces_adjoint
+from repro.fit import FitData, fit_snap_linear
+from repro.md.lattice import paper_box, perturb
+from repro.md.neighbor import brute_neighbors
+
+
+def main():
+    cfg = SnapConfig(twojmax=4, rcut=4.7)
+    rng = np.random.default_rng(7)
+    beta_true = jnp.asarray(rng.normal(size=cfg.ncoeff) * 1e-2)
+    beta0_true = -8.9
+
+    def make_config(seed, scale):
+        pos, box = paper_box(natoms=54)
+        pos = perturb(pos, scale, seed=seed)
+        nbr_idx, mask, disp, _ = brute_neighbors(pos, box, cfg.rcut, 40)
+        e, _, f = energy_forces_adjoint(
+            cfg, beta_true, beta0_true, disp[..., 0], disp[..., 1],
+            disp[..., 2], nbr_idx, mask)
+        return (FitData(disp=disp, nbr_idx=nbr_idx, mask=mask,
+                        e_ref=float(e), f_ref=np.asarray(f)),
+                disp, nbr_idx, mask, float(e), np.asarray(f))
+
+    dataset = [make_config(s, 0.05 + 0.04 * s)[0] for s in range(4)]
+    beta0, beta, diag = fit_snap_linear(cfg, dataset)
+    print(f'fit rms: energy {diag["rms_e"]:.3e} eV, '
+          f'force {diag["rms_f"]:.3e} eV/A')
+
+    # held-out validation: a fresh configuration never seen by the fit.
+    # (Exact coefficient recovery is ill-posed — near-lattice descriptors
+    # are collinear — but the fitted model must PREDICT perfectly.)
+    _, disp, nbr_idx, mask, e_ref, f_ref = make_config(99, 0.08)
+    e_hat, _, f_hat = energy_forces_adjoint(
+        cfg, beta, beta0, disp[..., 0], disp[..., 1], disp[..., 2],
+        nbr_idx, mask)
+    err_e = abs(float(e_hat) - e_ref) / abs(e_ref)
+    err_f = float(np.max(np.abs(np.asarray(f_hat) - f_ref)))
+    print(f'held-out: relE err = {err_e:.3e}, max|dF| = {err_f:.3e} eV/A')
+    assert err_e < 1e-6 and err_f < 1e-4, 'held-out prediction failed'
+    print('OK: fitted SNAP model generalizes to unseen configurations.')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+One module per assigned architecture (exact public-literature configs) plus
+the paper's own SNAP problem sizes (snap_2j8 / snap_2j14).
+"""
+
+from importlib import import_module
+
+ARCHS = (
+    'seamless-m4t-medium',
+    'arctic-480b',
+    'granite-moe-1b-a400m',
+    'gemma2-2b',
+    'deepseek-7b',
+    'glm4-9b',
+    'gemma3-1b',
+    'zamba2-7b',
+    'llama-3.2-vision-90b',
+    'falcon-mamba-7b',
+)
+
+_ALIAS = {
+    'seamless-m4t-medium': 'seamless_m4t_medium',
+    'arctic-480b': 'arctic_480b',
+    'granite-moe-1b-a400m': 'granite_moe_1b_a400m',
+    'gemma2-2b': 'gemma2_2b',
+    'deepseek-7b': 'deepseek_7b',
+    'glm4-9b': 'glm4_9b',
+    'gemma3-1b': 'gemma3_1b',
+    'zamba2-7b': 'zamba2_7b',
+    'llama-3.2-vision-90b': 'llama32_vision_90b',
+    'falcon-mamba-7b': 'falcon_mamba_7b',
+}
+
+
+def list_archs():
+    return list(ARCHS)
+
+
+def get_config(name: str):
+    mod = _ALIAS.get(name, name).replace('-', '_').replace('.', '')
+    return import_module(f'repro.configs.{mod}').CONFIG
+
+
+def get_snap_config(name: str):
+    return import_module(f'repro.configs.{name}').CONFIG

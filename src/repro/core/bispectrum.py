@@ -1,0 +1,120 @@
+"""Clebsch-Gordan stages: Z (eq. 3), B (eq. 2), and the adjoint Y (eq. 7).
+
+The irregular triple loops of LAMMPS ``compute_zi`` / ``compute_bi`` /
+``compute_yi`` are flattened to COO gather / scatter-add form (static index
+tables from :mod:`repro.core.indices`), vectorized over atoms.
+
+``compute_ylist`` fuses the Z product with the beta-weighted accumulation —
+each Z element is consumed the moment it is produced, which is precisely the
+paper's adjoint refactorization argument for never materializing Zlist.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .indices import SnapIndex
+
+
+_CHUNK_BYTES = 256 * 1024 * 1024  # peak size of a gathered COO intermediate
+
+
+def _auto_chunks(natoms: int, nnz: int, itemsize: int = 16) -> int:
+    return max(1, int(np.ceil(natoms * nnz * itemsize / _CHUNK_BYTES)))
+
+
+def _chunked_scatter_products(ut, src1, src2, coef, dest, out_width, nchunk):
+    """out[n, dest] += coef * ut[n, src1] * ut[n, src2], chunked over the COO
+    axis to bound peak memory (natoms x nnz intermediates)."""
+    n = ut.shape[0]
+    out = jnp.zeros((n, out_width), dtype=ut.dtype)
+    nnz = src1.shape[0]
+    if nchunk is None:
+        nchunk = _auto_chunks(n, nnz)
+    bounds = np.linspace(0, nnz, nchunk + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi == lo:
+            continue
+        prod = (ut[:, src1[lo:hi]] * ut[:, src2[lo:hi]]
+                * coef[lo:hi].astype(ut.real.dtype))
+        out = out.at[:, dest[lo:hi]].add(prod)
+    return out
+
+
+def compute_zlist(ulisttot, idx: SnapIndex, nchunk=None):
+    """Z matrices, complex [natoms, idxz_max] (LAMMPS compute_zi)."""
+    return _chunked_scatter_products(
+        ulisttot, idx.z_coo_src1, idx.z_coo_src2, idx.z_coo_cg,
+        idx.z_coo_dest, idx.idxz_max, nchunk)
+
+
+def compute_blist(ulisttot, zlist, idx: SnapIndex, bzero_flag=True):
+    """Bispectrum components, real [natoms, idxb_max] (LAMMPS compute_bi).
+
+    B[jjb] = 2 * sum_half w * Re(conj(u) z)  [- bzero[j]]
+    """
+    u = ulisttot[:, idx.b_coo_usrc]
+    z = zlist[:, idx.b_coo_zsrc]
+    contrib = idx.b_coo_w * (u.real * z.real + u.imag * z.imag)
+    b = jnp.zeros((ulisttot.shape[0], idx.idxb_max), dtype=contrib.dtype)
+    b = b.at[:, idx.b_coo_dest].add(contrib)
+    if bzero_flag:
+        shift = np.array([idx.bzero[t[2]] for t in idx.idxb_triples])
+        b = b - shift.astype(contrib.dtype)
+    return b
+
+
+def compute_ylist(ulisttot, beta, idx: SnapIndex, nchunk=None):
+    """Adjoint matrices Y_j = sum beta * Z (paper eq. 7, LAMMPS compute_yi).
+
+    Fuses the CG product with the beta accumulation: the COO destination is
+    remapped ``jjz -> jju`` and the per-jjz factor ``betaj`` is folded into
+    the CG coefficient, so no Z storage (O(J^5)) ever exists — only the
+    O(J^3) ylist.  beta: [idxb_max] (or [natoms, idxb_max] for per-atom
+    coefficients).  Returns complex [natoms, idxu_max] (half-plane filled).
+    """
+    betaj = idx.y_fac * beta[..., idx.y_jjb]            # [.., idxz_max]
+    coef_per_nnz = idx.z_coo_cg * betaj[..., idx.z_coo_dest]
+    dest = idx.idxz_jju[idx.z_coo_dest]
+    n = ulisttot.shape[0]
+    out = jnp.zeros((n, idx.idxu_max), dtype=ulisttot.dtype)
+    nnz = dest.shape[0]
+    if nchunk is None:
+        nchunk = _auto_chunks(n, nnz)
+    bounds = np.linspace(0, nnz, nchunk + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi == lo:
+            continue
+        prod = (ulisttot[:, idx.z_coo_src1[lo:hi]]
+                * ulisttot[:, idx.z_coo_src2[lo:hi]])
+        c = coef_per_nnz[..., lo:hi]
+        out = out.at[:, dest[lo:hi]].add(prod * c.astype(ulisttot.real.dtype))
+    return out
+
+
+def compute_dblist(du_pairs, zlist, atom_of_pair, idx: SnapIndex):
+    """dB/dr per pair (LAMMPS compute_dbidrj): real [P, 3, idxb_max].
+
+    du_pairs: complex [P, 3, idxu]; zlist: [natoms, idxz]; atom_of_pair: [P].
+    """
+    z = zlist[atom_of_pair][:, idx.db_coo_zsrc]          # [P, nnz]
+    du = du_pairs[:, :, idx.db_coo_dusrc]                # [P, 3, nnz]
+    contrib = idx.db_coo_w * (du.real * z.real[:, None, :]
+                              + du.imag * z.imag[:, None, :])
+    out = jnp.zeros((du_pairs.shape[0], 3, idx.idxb_max),
+                    dtype=contrib.dtype)
+    return out.at[:, :, idx.db_coo_dest].add(contrib)
+
+
+def compute_dedr(du_pairs, ylist, atom_of_pair, idx: SnapIndex):
+    """Fused force contraction (paper eq. 8, LAMMPS compute_deidrj).
+
+    dE_i/dr_k = 2 * sum_half w * Re(conj(dU) Y);  real [P, 3].
+    """
+    y = ylist[atom_of_pair]                              # [P, idxu]
+    w = idx.dedr_weight
+    s = (du_pairs.real * y.real[:, None, :]
+         + du_pairs.imag * y.imag[:, None, :]) * w
+    return 2.0 * jnp.sum(s, axis=-1)

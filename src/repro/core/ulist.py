@@ -1,0 +1,111 @@
+"""Vectorized Wigner-U recursion (paper eq. 1 / 9) over batches of pairs.
+
+The per-pair scalar recursion of LAMMPS ``compute_uarray`` is re-expressed as
+per-level dense gathers using the static maps in :mod:`repro.core.indices`.
+The batch dimension (atom x neighbor pairs) is the TPU-lane dimension — the
+AoSoA adaptation of the paper's Sec. VI-B layout.
+
+``compute_dulist`` carries a dual-number (tangent) component through the same
+recursion — one tangent per Cartesian direction — mirroring LAMMPS
+``compute_duarray`` and the paper's per-direction derivative kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import PairGeom, PairGeomGrad
+from .indices import SnapIndex
+
+
+def _cdtype(dtype):
+    return jnp.complex128 if dtype == jnp.float64 else jnp.complex64
+
+
+def compute_ulist(geom: PairGeom, idx: SnapIndex, dtype=jnp.float64):
+    """U_j elements for each pair: complex [*batch, idxu_max].
+
+    NOTE: these are the *raw* rotation-matrix elements; the switching-function
+    weight ``sfac`` is applied at accumulation time (as in LAMMPS
+    ``add_uarraytot``).
+    """
+    cdt = _cdtype(dtype)
+    a = (geom.a_r + 1j * geom.a_i).astype(cdt)
+    b = (geom.b_r + 1j * geom.b_i).astype(cdt)
+    batch = a.shape
+    ac = jnp.conj(a)[..., None]
+    bc = jnp.conj(b)[..., None]
+    levels = [jnp.ones(batch + (1,), dtype=cdt)]
+    for lv in idx.ulevels:
+        prev = levels[-1]
+        left = (ac * (prev[..., lv.a_src] * lv.a_coef.astype(dtype))
+                + bc * (prev[..., lv.b_src] * lv.b_coef.astype(dtype)))
+        src = left[..., lv.full_src]
+        full = jnp.where(lv.full_conj,
+                         lv.full_sign.astype(dtype) * jnp.conj(src), src)
+        levels.append(full)
+    return jnp.concatenate(levels, axis=-1)
+
+
+def compute_dulist(geom: PairGeom, dgeom: PairGeomGrad, idx: SnapIndex,
+                   dtype=jnp.float64):
+    """(u, du): raw U and d(sfac*U)/d(x,y,z) per pair.
+
+    Returns
+        u : complex [*batch, idxu_max]
+        du: complex [*batch, 3, idxu_max]  — already includes the
+            product-rule ``dsfac * u * unit + sfac * du_raw`` chain
+            (LAMMPS compute_duidrj final step).
+    """
+    cdt = _cdtype(dtype)
+    a = (geom.a_r + 1j * geom.a_i).astype(cdt)
+    b = (geom.b_r + 1j * geom.b_i).astype(cdt)
+    da = (dgeom.da_r + 1j * dgeom.da_i).astype(cdt)   # [*batch, 3]
+    db = (dgeom.db_r + 1j * dgeom.db_i).astype(cdt)
+    batch = a.shape
+    ac = jnp.conj(a)[..., None, None]                  # [*batch, 1, 1]
+    bc = jnp.conj(b)[..., None, None]
+    dac = jnp.conj(da)[..., None]                      # [*batch, 3, 1]
+    dbc = jnp.conj(db)[..., None]
+
+    u_levels = [jnp.ones(batch + (1,), dtype=cdt)]
+    du_levels = [jnp.zeros(batch + (3, 1), dtype=cdt)]
+    for lv in idx.ulevels:
+        prev = u_levels[-1]
+        dprev = du_levels[-1]
+        pa = prev[..., lv.a_src] * lv.a_coef.astype(dtype)    # [*batch, nle]
+        pb = prev[..., lv.b_src] * lv.b_coef.astype(dtype)
+        dpa = dprev[..., lv.a_src] * lv.a_coef.astype(dtype)  # [*batch, 3, nle]
+        dpb = dprev[..., lv.b_src] * lv.b_coef.astype(dtype)
+        left = ac[..., 0, :] * pa + bc[..., 0, :] * pb
+        dleft = (dac * pa[..., None, :] + ac * dpa
+                 + dbc * pb[..., None, :] + bc * dpb)
+        sgn = lv.full_sign.astype(dtype)
+        src = left[..., lv.full_src]
+        full = jnp.where(lv.full_conj, sgn * jnp.conj(src), src)
+        dsrc = dleft[..., lv.full_src]
+        dfull = jnp.where(lv.full_conj, sgn * jnp.conj(dsrc), dsrc)
+        u_levels.append(full)
+        du_levels.append(dfull)
+    u = jnp.concatenate(u_levels, axis=-1)
+    du_raw = jnp.concatenate(du_levels, axis=-1)
+    # chain rule with the switching function: d(sfac*u) = dsfac*u + sfac*du
+    sfac = geom.sfac.astype(dtype)
+    dsfac = dgeom.dsfac.astype(dtype)                  # [*batch, 3]
+    du = (dsfac[..., None].astype(cdt) * u[..., None, :]
+          + sfac[..., None, None].astype(cdt) * du_raw)
+    return u, du
+
+
+def compute_ulisttot(u_pairs, sfac, nbr_mask, idx: SnapIndex, wself=1.0):
+    """Accumulate sum_k sfac_k * U_k per atom + self contribution.
+
+    u_pairs: complex [natoms, nnbor, idxu]; sfac/nbr_mask: [natoms, nnbor].
+    Returns complex [natoms, idxu_max].
+    """
+    w = (sfac * nbr_mask).astype(u_pairs.real.dtype)
+    tot = jnp.sum(u_pairs * w[..., None].astype(u_pairs.dtype), axis=1)
+    self_vec = np.zeros(idx.idxu_max)
+    self_vec[idx.self_diag] = wself
+    return tot + jnp.asarray(self_vec, dtype=u_pairs.dtype)

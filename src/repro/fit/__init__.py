@@ -1,0 +1,1 @@
+from .linear import fit_snap_linear, FitData  # noqa: F401

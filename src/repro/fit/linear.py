@@ -1,0 +1,98 @@
+"""FitSNAP-style linear fitting of the SNAP coefficients beta.
+
+SNAP is a machine-learned potential: E_i = beta0 + beta . B_i is linear in
+the descriptors, so training against reference energies AND forces is a
+(weighted) linear least-squares problem:
+
+    E_ref(config)  =  N*beta0 + beta . sum_i B_i
+    F_ref(atom k)  =  -beta . dB_total/dr_k
+
+The force design-matrix rows are assembled from the *baseline* pipeline's
+dB per pair (the adjoint trick does not apply during fitting — Y depends on
+beta, which is what we are solving for; this is why LAMMPS keeps compute_dbidrj
+for `compute snap` even after the adjoint refactorization).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bispectrum as bs
+from repro.core.snap import SnapConfig, _pair_geometry, compute_bispectrum
+from repro.core.ulist import compute_dulist, compute_ulisttot
+
+
+@dataclass
+class FitData:
+    """One training configuration (cell) with reference labels."""
+    disp: np.ndarray        # [N, K, 3]
+    nbr_idx: np.ndarray     # [N, K]
+    mask: np.ndarray        # [N, K]
+    e_ref: float            # total energy
+    f_ref: np.ndarray       # [N, 3]
+    w_e: float = 1.0
+    w_f: float = 1.0
+
+
+def descriptor_rows(cfg: SnapConfig, data: FitData):
+    """(energy_row [ncoeff+1], force_rows [3N, ncoeff+1])."""
+    dx, dy, dz = (data.disp[..., i] for i in range(3))
+    b = compute_bispectrum(cfg, dx, dy, dz, data.mask)
+    n = data.disp.shape[0]
+    e_row = np.concatenate([[n], np.asarray(b.sum(0))])
+
+    idx = cfg.index
+    geom, dgeom, ok = _pair_geometry(
+        cfg, jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+        jnp.asarray(data.mask), grad=True)
+    u, du = compute_dulist(geom, dgeom, idx, cfg.dtype)
+    ut = compute_ulisttot(u, geom.sfac, ok, idx, cfg.wself)
+    z = bs.compute_zlist(ut, idx)
+    atom_of_pair = jnp.repeat(jnp.arange(n), data.disp.shape[1])
+    db = bs.compute_dblist(du.reshape(-1, 3, idx.idxu_max), z,
+                           atom_of_pair, idx)          # [P, 3, ncoeff]
+    db = np.asarray(db).reshape(n, -1, 3, idx.idxb_max)
+    db = db * data.mask[..., None, None]
+    # dB_total/dr_m = sum_{i: m in nbrs(i)} db(i,m) - sum_k db(m,k)
+    dbt = np.zeros((n, 3, idx.idxb_max))
+    np.add.at(dbt, data.nbr_idx.reshape(-1),
+              db.reshape(-1, 3, idx.idxb_max))
+    dbt -= db.sum(axis=1)
+    f_rows = np.concatenate(
+        [np.zeros((3 * n, 1)), -dbt.reshape(3 * n, idx.idxb_max)], axis=1)
+    return e_row, f_rows
+
+
+def fit_snap_linear(cfg: SnapConfig, dataset: List[FitData],
+                    ridge: float = 1e-8):
+    """Weighted ridge solve for (beta0, beta).  Returns (beta0, beta,
+    diagnostics)."""
+    rows, targets, weights = [], [], []
+    for d in dataset:
+        e_row, f_rows = descriptor_rows(cfg, d)
+        rows.append(e_row[None])
+        targets.append([d.e_ref])
+        weights.append([d.w_e])
+        rows.append(f_rows)
+        targets.append(np.asarray(d.f_ref).reshape(-1))
+        weights.append(np.full(f_rows.shape[0], d.w_f))
+    A = np.concatenate(rows, axis=0)
+    y = np.concatenate([np.atleast_1d(t) for t in targets])
+    w = np.concatenate(weights)
+    Aw = A * w[:, None]
+    yw = y * w
+    if ridge:
+        ncols = A.shape[1]
+        Aw = np.concatenate([Aw, np.sqrt(ridge) * np.eye(ncols)])
+        yw = np.concatenate([yw, np.zeros(ncols)])
+    coef, *_ = np.linalg.lstsq(Aw, yw, rcond=None)
+    pred = A @ coef
+    rms_e = float(np.sqrt(np.mean((pred[:1] - y[:1]) ** 2)))
+    rms_f = float(np.sqrt(np.mean((pred[1:] - y[1:]) ** 2)))
+    return float(coef[0]), jnp.asarray(coef[1:]), dict(rms_e=rms_e,
+                                                       rms_f=rms_f)

@@ -1,0 +1,193 @@
+"""Shared machinery for the SNAP Pallas TPU kernels.
+
+Layout convention (the TPU adaptation of the paper's Sec. VI-B AoSoA):
+the *atom* index lives on the 128-wide lane dimension (innermost "A" = 128),
+quantum numbers live on sublanes, and neighbors are iterated inside the
+kernel (replacing CUDA atomics with an in-register reduction).
+
+The per-level recursion constants (rootpq coefficient matrices, mirror sign
+matrices, half-plane contraction weights) are small static numpy tables baked
+into the kernel closure — the analogue of CUDA constant memory.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 128
+PI = 3.141592653589793
+
+
+@lru_cache(maxsize=8)
+def level_consts(twojmax: int):
+    """Per-level static tables for the in-kernel Wigner recursion.
+
+    For level j (1..twojmax), left rows mb = 0..j//2:
+      CA[mb, ma] =  sqrt((j-ma)/(j-mb))   multiplies conj(a)*u_{j-1}(mb, ma),
+                                          contributing to column ma
+      CB[mb, ma] = -sqrt((ma+1)/(j-mb))   multiplies conj(b)*u_{j-1}(mb, ma),
+                                          contributing to column ma+1
+      SGN[r, c]  = (-1)^(mb'+ma') for the mirrored rows mb' = j//2+1 .. j
+      W          = half-plane contraction weights over the full layer
+    """
+    out = []
+    for j in range(1, twojmax + 1):
+        rows = j // 2 + 1
+        ca = np.zeros((rows, j), dtype=np.float64)
+        cb = np.zeros((rows, j), dtype=np.float64)
+        for mb in range(rows):
+            for ma in range(j):
+                ca[mb, ma] = math.sqrt((j - ma) / (j - mb))
+                cb[mb, ma] = -math.sqrt((ma + 1) / (j - mb))
+        nmir = j + 1 - rows
+        sgn = np.zeros((nmir, j + 1), dtype=np.float64)
+        for r in range(nmir):
+            mbp = rows + r
+            for ma in range(j + 1):
+                sgn[r, ma] = 1.0 if (mbp + ma) % 2 == 0 else -1.0
+        w = np.zeros((j + 1, j + 1), dtype=np.float64)
+        for mb in range(j + 1):
+            if 2 * mb < j:
+                w[mb, :] = 1.0
+            elif 2 * mb == j:
+                w[mb, : j // 2] = 1.0
+                w[mb, j // 2] = 0.5
+        out.append(dict(j=j, rows=rows, ca=ca, cb=cb, sgn=sgn, w=w))
+    return tuple(out)
+
+
+def level_coefs(j: int, dtype):
+    """In-kernel constant builders (Pallas forbids captured trace-time
+    constants; iota arithmetic keeps the kernel self-contained).
+
+    Returns CA, CB [rows, j, 1], SGN [nmir, j+1, 1], W [j+1, j+1, 1]."""
+    import jax
+    rows = j // 2 + 1
+    nmir = j + 1 - rows
+    ma = jax.lax.broadcasted_iota(dtype, (rows, j, 1), 1)
+    mb = jax.lax.broadcasted_iota(dtype, (rows, j, 1), 0)
+    ca = jnp.sqrt((j - ma) / (j - mb))
+    cb = -jnp.sqrt((ma + 1.0) / (j - mb))
+    r = jax.lax.broadcasted_iota(dtype, (nmir, j + 1, 1), 0)
+    c = jax.lax.broadcasted_iota(dtype, (nmir, j + 1, 1), 1)
+    sgn = 1.0 - 2.0 * jnp.mod(r + rows + c, 2.0)
+    mbw = jax.lax.broadcasted_iota(dtype, (j + 1, j + 1, 1), 0)
+    maw = jax.lax.broadcasted_iota(dtype, (j + 1, j + 1, 1), 1)
+    half = jnp.asarray(j / 2.0, dtype)
+    w = jnp.where(
+        mbw < half, 1.0,
+        jnp.where(mbw > half, 0.0,
+                  jnp.where(maw < half, 1.0,
+                            jnp.where(maw > half, 0.0, 0.5))))
+    return ca, cb, sgn, w
+
+
+def u_level_step(prev_r, prev_i, a_r, a_i, b_r, b_i, j, dtype):
+    """One recursion level on [rows, cols, LANES] values (pure jnp, usable
+    inside a Pallas kernel body).
+
+    prev_*: full previous layer [j, j, L].  Returns full layer [j+1, j+1, L].
+    """
+    rows = j // 2 + 1
+    ca, cb, sgn, _ = level_coefs(j, dtype)
+    p_r = prev_r[:rows]            # [rows, j, L]
+    p_i = prev_i[:rows]
+    # conj(a) * u  and  conj(b) * u
+    au_r = a_r * p_r + a_i * p_i
+    au_i = a_r * p_i - a_i * p_r
+    bu_r = b_r * p_r + b_i * p_i
+    bu_i = b_r * p_i - b_i * p_r
+    pad_a = [(0, 0), (0, 1), (0, 0)]
+    pad_b = [(0, 0), (1, 0), (0, 0)]
+    left_r = jnp.pad(ca * au_r, pad_a) + jnp.pad(cb * bu_r, pad_b)
+    left_i = jnp.pad(ca * au_i, pad_a) + jnp.pad(cb * bu_i, pad_b)
+    # symmetry fill: u(j-mb, j-ma) -> sign * conj
+    nmir = j + 1 - rows
+    src_r = jnp.flip(left_r[:nmir], axis=(0, 1))
+    src_i = jnp.flip(left_i[:nmir], axis=(0, 1))
+    full_r = jnp.concatenate([left_r, sgn * src_r], axis=0)
+    full_i = jnp.concatenate([left_i, -sgn * src_i], axis=0)
+    return full_r, full_i
+
+
+def geom_ck(x, y, z, rcut, rmin0, rfac0, switch_flag):
+    """Cayley-Klein parameters + sfac, elementwise on lane vectors."""
+    rsq = x * x + y * y + z * z
+    r = jnp.sqrt(rsq)
+    rscale0 = rfac0 * PI / (rcut - rmin0)
+    theta0 = (r - rmin0) * rscale0
+    z0 = r * jnp.cos(theta0) / jnp.sin(theta0)
+    r0inv = 1.0 / jnp.sqrt(rsq + z0 * z0)
+    a_r, a_i = r0inv * z0, -r0inv * z
+    b_r, b_i = r0inv * y, -r0inv * x
+    if switch_flag:
+        t = (r - rmin0) * PI / (rcut - rmin0)
+        sfac = jnp.where(r <= rmin0, 1.0,
+                         jnp.where(r > rcut, 0.0, 0.5 * (jnp.cos(t) + 1.0)))
+    else:
+        sfac = jnp.ones_like(r)
+    return a_r, a_i, b_r, b_i, sfac
+
+
+def geom_ck_grad(x, y, z, rcut, rmin0, rfac0, switch_flag):
+    """Geometry + per-direction derivatives, tuple-of-lanes form.
+
+    Returns (a_r, a_i, b_r, b_i, sfac), and per direction k in (x, y, z):
+    lists da_r[k], da_i[k], db_r[k], db_i[k], dsfac[k].
+    """
+    rsq = x * x + y * y + z * z
+    r = jnp.sqrt(rsq)
+    rscale0 = rfac0 * PI / (rcut - rmin0)
+    theta0 = (r - rmin0) * rscale0
+    cs, sn = jnp.cos(theta0), jnp.sin(theta0)
+    z0 = r * cs / sn
+    dz0dr = z0 / r - r * rscale0 * (rsq + z0 * z0) / rsq
+    r0inv = 1.0 / jnp.sqrt(rsq + z0 * z0)
+    dr0invdr = -(r0inv ** 3) * (r + z0 * dz0dr)
+    unit = (x / r, y / r, z / r)
+    a_r, a_i = r0inv * z0, -r0inv * z
+    b_r, b_i = r0inv * y, -r0inv * x
+    da_r, da_i, db_r, db_i, dsfac = [], [], [], [], []
+    if switch_flag:
+        c = PI / (rcut - rmin0)
+        t = (r - rmin0) * c
+        sfac = jnp.where(r <= rmin0, 1.0,
+                         jnp.where(r > rcut, 0.0, 0.5 * (jnp.cos(t) + 1.0)))
+        dsf = jnp.where((r <= rmin0) | (r > rcut), 0.0, -0.5 * jnp.sin(t) * c)
+    else:
+        sfac = jnp.ones_like(r)
+        dsf = jnp.zeros_like(r)
+    for k in range(3):
+        dr0inv = dr0invdr * unit[k]
+        dz0 = dz0dr * unit[k]
+        dar = dz0 * r0inv + z0 * dr0inv
+        dai = -z * dr0inv - (r0inv if k == 2 else 0.0)
+        dbr = y * dr0inv + (r0inv if k == 1 else 0.0)
+        dbi = -x * dr0inv - (r0inv if k == 0 else 0.0)
+        da_r.append(dar)
+        da_i.append(dai)
+        db_r.append(dbr)
+        db_i.append(dbi)
+        dsfac.append(dsf * unit[k])
+    return (a_r, a_i, b_r, b_i, sfac), (da_r, da_i, db_r, db_i, dsfac)
+
+
+def pad_lanes(arr, axis=-1, lanes=LANES):
+    """Pad an axis up to a multiple of the lane width."""
+    n = arr.shape[axis]
+    pad = (-n) % lanes
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    import jax
+    return jax.devices()[0].platform != 'tpu'

@@ -1,0 +1,102 @@
+"""Jitted wrappers around the SNAP Pallas kernels + the kernel-backed
+energy/forces pipeline (``impl='kernel'`` in :func:`repro.core.snap.energy_forces`).
+
+The wrappers own all layout plumbing: [natoms, nnbor] padded neighbor lists
+in, physics out — identical signatures to the pure-jnp pipelines so the MD
+driver and benchmarks can swap implementations freely.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bispectrum as bs
+from repro.core.geometry import sanitize_displacements
+from repro.core.indices import build_index
+from repro.core.snap import SnapConfig, assemble_forces, energy_from_ylist
+
+from .common import LANES, default_interpret
+from .snap_fused_de import snap_fused_de_pallas
+from .snap_u import snap_u_pallas
+
+
+def _kernel_layout(cfg: SnapConfig, dx, dy, dz, mask, dtype):
+    """[natoms, nnbor] displacement triplets -> [nnbor, 4, natoms_pad]."""
+    dx, dy, dz, ok = sanitize_displacements(dx, dy, dz, mask,
+                                            safe_r=0.5 * cfg.rcut)
+    natoms = dx.shape[0]
+    pad = (-natoms) % LANES
+    disp = jnp.stack([dx.T, dy.T, dz.T, ok.T.astype(dx.dtype)], axis=1)
+    disp = jnp.pad(disp, [(0, 0), (0, 0), (0, pad)]).astype(dtype)
+    # dead lanes (atom padding) must still see a regular radius: the
+    # Cayley-Klein map is singular at r = 0 even when masked out.
+    m = disp[:, 3, :]
+    disp = disp.at[:, 0, :].set(
+        jnp.where(m > 0, disp[:, 0, :], 0.5 * cfg.rcut))
+    return disp, ok, natoms
+
+
+def snap_ui_kernel(cfg: SnapConfig, dx, dy, dz, mask, dtype=jnp.float32,
+                   interpret=None):
+    """Ulisttot via the Pallas kernel: complex [natoms, idxu_max]."""
+    if interpret is None:
+        interpret = default_interpret()
+    idx = cfg.index
+    disp, ok, natoms = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
+    ut_r, ut_i = snap_u_pallas(
+        disp, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
+    ut = (ut_r[:, :natoms] + 1j * ut_i[:, :natoms]).T
+    self_vec = np.zeros(idx.idxu_max)
+    self_vec[idx.self_diag] = cfg.wself
+    return ut + jnp.asarray(self_vec, dtype=ut.dtype)
+
+
+def snap_dedr_kernel(cfg: SnapConfig, dx, dy, dz, mask, ylist,
+                     dtype=jnp.float32, interpret=None,
+                     variant: str = 'half'):
+    """Fused dE/dr per pair via the Pallas kernel: [natoms, nnbor, 3].
+
+    variant='half' (default) carries only the symmetric half of the
+    recursion state (beyond-paper §Perf iteration); 'full' is the v1
+    kernel mirroring every level.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    disp, ok, natoms = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
+    pad = disp.shape[-1] - natoms
+    y_r = jnp.pad(ylist.real.T.astype(dtype), [(0, 0), (0, pad)])
+    y_i = jnp.pad(ylist.imag.T.astype(dtype), [(0, 0), (0, pad)])
+    if variant == 'half':
+        from .snap_fused_de_half import snap_fused_de_half_pallas as fn
+    else:
+        fn = snap_fused_de_pallas
+    dedr = fn(disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut,
+              rmin0=cfg.rmin0, rfac0=cfg.rfac0,
+              switch_flag=cfg.switch_flag, interpret=interpret)
+    return dedr[:, :3, :natoms].transpose(2, 0, 1)
+
+
+def energy_forces_kernel(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
+                         mask, dtype=jnp.float32, interpret=None,
+                         with_energy=True):
+    """Kernel-backed adjoint pipeline: Pallas U -> jnp Y -> Pallas fused dE.
+
+    compute_Y stays a JAX-level scatter-add: its irregular Clebsch-Gordan
+    sums are the one stage whose GPU-specific optimization (warp-level load
+    balancing) has no TPU analogue — see DESIGN.md hardware-adaptation table.
+    """
+    idx = cfg.index
+    natoms = dx.shape[0]
+    ut = snap_ui_kernel(cfg, dx, dy, dz, mask, dtype, interpret)
+    y = bs.compute_ylist(ut, beta, idx)
+    dedr = snap_dedr_kernel(cfg, dx, dy, dz, mask, y, dtype, interpret)
+    forces = assemble_forces(dedr, nbr_idx, mask, natoms)
+    if not with_energy:
+        return None, None, forces
+    e_atom = energy_from_ylist(cfg, ut, y, beta, beta0)
+    return jnp.sum(e_atom), e_atom, forces

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: SNAP compute_U (paper Sec. VI-A).
+
+Adaptation of the paper's shared-memory recursion kernel:
+
+- one grid step owns a 128-atom lane tile (AoSoA inner "A" = lane width);
+- the neighbor sum that needed CUDA atomics becomes an in-register
+  reduction over the neighbor axis (statically unrolled);
+- only the previous recursion level is kept live (the paper's double
+  buffer) — the full Ulist per pair is never materialized in HBM, only the
+  per-atom Ulisttot leaves the kernel;
+- re/im are split planes (paper Sec. VI-A split for atomics; here it keeps
+  every load/store a full 8x128 tile).
+
+VMEM budget per grid step (2J=14, fp32): inputs nnbor*4*128*4 B (~0.4 MB for
+26 neighbors) + 2 output planes 1240*128*4 B (~1.3 MB) + live recursion
+state < 0.5 MB — far under the ~128 MB/core budget, leaving room for
+multiple in-flight grid steps.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.indices import build_index
+from .common import LANES, geom_ck, u_level_step
+
+
+def _snap_u_kernel(disp_ref, out_r_ref, out_i_ref, *, twojmax, nnbor,
+                   rcut, rmin0, rfac0, switch_flag, dtype):
+    """disp_ref: [nnbor, 4, LANES] rows (x, y, z, mask) — atoms on lanes.
+    out_*_ref: [idxu_max, LANES] accumulated sum_k sfac_k * U_k (no self)."""
+    idx = build_index(twojmax)
+    acc_r = jnp.zeros((idx.idxu_max, LANES), dtype)
+    acc_i = jnp.zeros((idx.idxu_max, LANES), dtype)
+    for k in range(nnbor):
+        x = disp_ref[k, 0, :]
+        y = disp_ref[k, 1, :]
+        z = disp_ref[k, 2, :]
+        m = disp_ref[k, 3, :]
+        a_r, a_i, b_r, b_i, sfac = geom_ck(
+            x, y, z, rcut, rmin0, rfac0, switch_flag)
+        sfac = sfac * m
+        lvl_r = jnp.ones((1, 1, LANES), dtype)
+        lvl_i = jnp.zeros((1, 1, LANES), dtype)
+        outs_r = [sfac[None, :]]
+        outs_i = [jnp.zeros((1, LANES), dtype)]
+        for j in range(1, twojmax + 1):
+            lvl_r, lvl_i = u_level_step(
+                lvl_r, lvl_i, a_r, a_i, b_r, b_i, j, dtype)
+            n = (j + 1) ** 2
+            outs_r.append(sfac * lvl_r.reshape(n, LANES))
+            outs_i.append(sfac * lvl_i.reshape(n, LANES))
+        acc_r = acc_r + jnp.concatenate(outs_r, axis=0)
+        acc_i = acc_i + jnp.concatenate(outs_i, axis=0)
+    out_r_ref[...] = acc_r
+    out_i_ref[...] = acc_i
+
+
+def snap_u_pallas(disp, *, twojmax, rcut, rmin0=0.0, rfac0=0.99363,
+                  switch_flag=True, interpret=True):
+    """disp: [nnbor, 4, natoms_pad] (x, y, z, mask), natoms_pad % 128 == 0.
+
+    Returns (ut_r, ut_i): [idxu_max, natoms_pad], neighbor-accumulated raw
+    U sums (self contribution NOT included — added by the ops wrapper).
+    """
+    nnbor, four, natoms_pad = disp.shape
+    assert four == 4 and natoms_pad % LANES == 0
+    idx = build_index(twojmax)
+    dtype = disp.dtype
+    kernel = partial(
+        _snap_u_kernel, twojmax=twojmax, nnbor=nnbor, rcut=rcut,
+        rmin0=rmin0, rfac0=rfac0, switch_flag=switch_flag, dtype=dtype)
+    grid = (natoms_pad // LANES,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((nnbor, 4, LANES), lambda i: (0, 0, i))],
+        out_specs=[pl.BlockSpec((idx.idxu_max, LANES), lambda i: (0, i)),
+                   pl.BlockSpec((idx.idxu_max, LANES), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype),
+                   jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype)],
+        interpret=interpret,
+    )(disp)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes, with ShapeDtypeStruct inputs only
+(no allocation), and record memory / cost / collective analysis per cell.
+
+MUST be run as a standalone process (the XLA flag above must precede any
+jax initialization — do not import this module from tests or benchmarks).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+        --shape train_4k --mesh single --out experiments/dryrun
+"""
+
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.sharding import (auto_spec, batch_shardings,
+                                   cache_shardings, opt_shardings,
+                                   param_shardings, replicated)
+from repro.launch.steps import (act_partition_spec, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                train_policy)
+from repro.models.config import SHAPES
+from repro.models.specs import input_specs, params_specs
+from repro.models.transformer import init_params
+from repro.optim.adamw import adamw_init
+
+_DTYPE_BYTES = {'f64': 8, 'f32': 4, 'bf16': 2, 'f16': 2, 's64': 8,
+                'u64': 8, 's32': 4, 'u32': 4, 's16': 2, 'u16': 2,
+                's8': 1, 'u8': 1, 'pred': 1, 'c64': 8, 'c128': 16}
+
+_COLL_OPS = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+             'collective-permute')
+
+_TYPE_RE = re.compile(r'(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|'
+                      r'pred|c64|c128)\[([0-9,]*)\]')
+
+
+def collective_stats(hlo_text: str):
+    """Per-device collective bytes by op kind, parsed from optimized HLO."""
+    stats = {k: dict(count=0, bytes=0) for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            token = f' {op}('
+            if token not in line and not line.lstrip().startswith(f'{op}('):
+                continue
+            lhs = line.split(token)[0]
+            if '=' in lhs:
+                lhs = lhs.split('=', 1)[1]
+            nbytes = 0
+            for dt, dims in _TYPE_RE.findall(lhs):
+                n = 1
+                for d in dims.split(','):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            if nbytes:
+                stats[op]['count'] += 1
+                stats[op]['bytes'] += nbytes
+            break
+    stats['total_bytes'] = sum(
+        v['bytes'] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def _mem_dict(mem):
+    out = {}
+    for k in ('argument_size_in_bytes', 'output_size_in_bytes',
+              'temp_size_in_bytes', 'alias_size_in_bytes',
+              'generated_code_size_in_bytes'):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(cost):
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for k, v in dict(cost).items():
+        if isinstance(v, (int, float)) and (
+                k in ('flops', 'transcendentals', 'bytes accessed')
+                or k.startswith('bytes accessed')):
+            out[k] = float(v)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               hlo_path: Path | None = None):
+    """Build + lower + compile one cell; returns the record dict."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape_name)
+    if specs is None:
+        return dict(status='skipped',
+                    reason='long_500k inapplicable: full-attention arch '
+                           '(see DESIGN.md long-context policy)')
+    kind = SHAPES[shape_name]['kind']
+    pol = train_policy(cfg)
+    t0 = time.time()
+
+    params_abs = params_specs(cfg)
+    if pol['param_dtype'] != 'float32' or kind != 'train':
+        # serving deployments store bf16 weights at rest: halves the
+        # resident parameter HBM and every decode-time parameter read.
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                else s.dtype),
+            params_abs)
+    pshard = param_shardings(params_abs, mesh)
+    with jax.sharding.set_mesh(mesh):
+        if kind == 'train':
+            opt_abs = jax.eval_shape(
+                partial(adamw_init, state_dtype=pol['state_dtype']),
+                params_abs)
+            oshard = opt_shardings(opt_abs, pshard, mesh)
+            bshard = batch_shardings(specs, mesh)
+            act = act_partition_spec(cfg, mesh, SHAPES[shape_name]['seq'])
+            act_ns = (tuple(NamedSharding(mesh, a) for a in act)
+                      if act is not None else None)
+            step = make_train_step(cfg, state_dtype=pol['state_dtype'],
+                                   act_spec=act_ns,
+                                   microbatches=pol.get('microbatches', 1))
+            fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, specs)
+        elif kind == 'prefill':
+            bshard = batch_shardings(specs, mesh)
+            step = make_prefill_step(cfg)
+            out_abs = jax.eval_shape(step, params_abs, specs)
+            out_sh = (None, cache_shardings(out_abs[1], mesh))
+            fn = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=out_sh)
+            lowered = fn.lower(params_abs, specs)
+        else:  # decode
+            cache_abs = specs['cache']
+            cshard = cache_shardings(cache_abs, mesh)
+            tok_sh = batch_shardings(
+                {'t': specs['tokens']}, mesh)['t']
+            step = make_decode_step(cfg)
+            fn = jax.jit(step,
+                         in_shardings=(pshard, cshard, tok_sh,
+                                       replicated(mesh)),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, cache_abs, specs['tokens'],
+                               specs['pos'])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec = dict(status='ok', arch=arch, shape=shape_name,
+               mesh='2x16x16' if multi_pod else '16x16',
+               n_devices=int(np.prod(list(mesh.shape.values()))),
+               kind=kind, policy=pol,
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+    try:
+        rec['memory'] = _mem_dict(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover
+        rec['memory_error'] = str(e)
+    try:
+        rec['cost'] = _cost_dict(compiled.cost_analysis())
+    except Exception as e:  # pragma: no cover
+        rec['cost_error'] = str(e)
+    try:
+        text = compiled.as_text()
+        rec['collectives_uncorrected'] = collective_stats(text)
+        # trip-count-corrected accounting (scan bodies x their trip counts)
+        from repro.launch.hlo_cost import analyze_hlo
+        rec['hlo_cost'] = analyze_hlo(text)
+        if hlo_path is not None:
+            with gzip.open(hlo_path, 'wt') as f:
+                f.write(text)
+            rec['hlo_file'] = hlo_path.name
+    except Exception as e:  # pragma: no cover
+        rec['collectives_error'] = str(e)
+    return rec
+
+
+def cell_path(outdir: Path, arch, shape, multi_pod):
+    mesh = 'multi' if multi_pod else 'single'
+    return outdir / f'{arch}__{shape}__{mesh}.json'
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='all')
+    ap.add_argument('--shape', default='all')
+    ap.add_argument('--mesh', default='both',
+                    choices=['single', 'multi', 'both'])
+    ap.add_argument('--out', default='experiments/dryrun')
+    ap.add_argument('--force', action='store_true')
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == 'all' else [args.arch]
+    shapes = list(SHAPES) if args.shape == 'all' else [args.shape]
+    meshes = {'single': [False], 'multi': [True],
+              'both': [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                path = cell_path(outdir, arch, shape, mp)
+                if path.exists() and not args.force:
+                    print(f'[skip existing] {path.name}', flush=True)
+                    continue
+                print(f'[cell] {arch} x {shape} x '
+                      f'{"multi" if mp else "single"}', flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     hlo_path=path.with_suffix('.hlo.gz'))
+                except Exception:
+                    rec = dict(status='error', arch=arch, shape=shape,
+                               mesh='2x16x16' if mp else '16x16',
+                               traceback=traceback.format_exc())
+                    n_fail += 1
+                path.write_text(json.dumps(rec, indent=1))
+                print(f'  -> {rec["status"]}'
+                      + (f' compile={rec.get("compile_s")}s'
+                         if rec.get('compile_s') else ''), flush=True)
+    print(f'done; {n_fail} failures')
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

@@ -1,0 +1,238 @@
+"""Trip-count-corrected cost analysis from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 30 layer groups contributes its body a single time, so
+FLOPs and collective bytes are understated by the trip count.  Since the
+dry-run models are scan-structured (that is what keeps 100-layer compiles
+tractable), we post-process the optimized HLO:
+
+1. split the module into computation blocks and record every
+   instruction's result shape (symbol table);
+2. build the call graph (fusion ``calls=``, ``to_apply=``, while
+   ``body=``/``condition=``) with while multipliers taken from
+   ``backend_config known_trip_count`` (all our loops are counted);
+3. propagate multipliers from ENTRY and accumulate per block:
+   - exact dot FLOPs (2 x result_elems x contracted extent, from the lhs
+     operand's recorded shape + dimension numbers),
+   - elementwise / transcendental FLOP estimates (1 per output element),
+   - collective bytes by kind (result-type bytes, `-start` variants
+     counted once).
+
+The result is the per-device roofline input.  Validated against
+``cost_analysis`` on scan-free graphs and against analytic truth on scans
+(tests/test_hlo_cost.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {'f64': 8, 'f32': 4, 'bf16': 2, 'f16': 2, 's64': 8,
+                'u64': 8, 's32': 4, 'u32': 4, 's16': 2, 'u16': 2,
+                's8': 1, 'u8': 1, 'pred': 1, 'c64': 8, 'c128': 16}
+
+_TYPE_RE = re.compile(
+    r'(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)'
+    r'\[([0-9,]*)\]')
+
+_DEF_RE = re.compile(
+    r'^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*')
+
+_BLOCK_RE = re.compile(
+    r'^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{$')
+
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+
+_DNUM_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+_COLL_OPS = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+             'collective-permute')
+
+_EW_OPS = (' add(', ' subtract(', ' multiply(', ' divide(', ' maximum(',
+           ' minimum(', ' select(', ' compare(', ' and(', ' or(',
+           ' negate(', ' abs(', ' clamp(')
+_TRANS_OPS = (' exponential(', ' tanh(', ' log(', ' rsqrt(', ' sqrt(',
+              ' power(', ' cosine(', ' sine(', ' logistic(',
+              ' exponential-minus-one(')
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(','):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _dims_list(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(',') if d]
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.blocks: Dict[str, List[str]] = {}
+        self.entry: str = ''
+        self.shapes: Dict[str, Tuple[str, List[int]]] = {}
+        self._parse(text)
+        self.mult = self._multipliers()
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            if cur is None:
+                m = _BLOCK_RE.match(s)
+                if m:
+                    cur = m.group(2)
+                    self.blocks[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if s == '}':
+                cur = None
+                continue
+            self.blocks[cur].append(s)
+            dm = _DEF_RE.match(s)
+            if dm:
+                tm = _TYPE_RE.search(s[dm.end():])
+                if tm:
+                    self.shapes[dm.group(1)] = (
+                        tm.group(1), _dims_list(tm.group(2)))
+
+    def _multipliers(self) -> Dict[str, float]:
+        edges: Dict[str, List] = defaultdict(list)
+        for name, lines in self.blocks.items():
+            for ln in lines:
+                trip = 1
+                if ' while(' in ln:
+                    tm = _TRIP_RE.search(ln)
+                    if tm:
+                        trip = int(tm.group(1))
+                for key in ('calls=', 'to_apply=', 'body=', 'condition='):
+                    for m in re.finditer(key + r'%?([\w\.\-]+)', ln):
+                        k = trip if key in ('body=', 'condition=') else 1
+                        edges[name].append((m.group(1), k))
+        mult: Dict[str, float] = defaultdict(float)
+        stack = []
+
+        def visit(name, k):
+            if k <= 0 or name not in self.blocks or name in stack:
+                return
+            mult[name] += k
+            stack.append(name)
+            for callee, factor in edges.get(name, []):
+                visit(callee, k * factor)
+            stack.pop()
+
+        if self.entry:
+            visit(self.entry, 1.0)
+        return dict(mult)
+
+    def _dot_flops(self, line: str) -> float:
+        res_seg = line.split(' dot(', 1)
+        lhs = res_seg[0]
+        if '=' in lhs:
+            lhs = lhs.split('=', 1)[1]
+        rt = _TYPE_RE.search(lhs)
+        if not rt:
+            return 0.0
+        res_elems = _shape_elems(rt.group(2))
+        args = res_seg[1]
+        om = re.match(r'\s*%([\w\.\-]+)', args)
+        contract = 1
+        if om and om.group(1) in self.shapes:
+            lhs_dims = self.shapes[om.group(1)][1]
+            cm = _DNUM_RE.search(line)
+            if cm:
+                for ci in _dims_list(cm.group(1)):
+                    if ci < len(lhs_dims):
+                        contract *= lhs_dims[ci]
+        return 2.0 * res_elems * contract
+
+    def _fusion_bodies(self):
+        bodies = set()
+        for lines in self.blocks.values():
+            for ln in lines:
+                if ' fusion(' in ln:
+                    for m in re.finditer(r'calls=%?([\w\.\-]+)', ln):
+                        bodies.add(m.group(1))
+        return bodies
+
+    _SKIP_BYTES = (' parameter(', ' constant(', ' tuple(',
+                   ' get-tuple-element(', ' bitcast(', ' after-all(',
+                   ' partition-id(', ' replica-id(')
+
+    def _line_bytes(self, ln: str) -> int:
+        """result bytes + operand bytes (HBM traffic estimate for one
+        top-level instruction; fusion interiors never touch HBM)."""
+        if any(op in ln for op in self._SKIP_BYTES):
+            return 0
+        seg = ln.split('=', 1)
+        if len(seg) < 2:
+            return 0
+        rhs = seg[1]
+        total = 0
+        rt = _TYPE_RE.search(rhs.split('(', 1)[0])
+        if rt:
+            total += _shape_elems(rt.group(2)) * _DTYPE_BYTES[rt.group(1)]
+        args = rhs.split('(', 1)
+        if len(args) > 1:
+            for m in re.finditer(r'%([\w\.\-]+)', args[1].split(')')[0]):
+                sh = self.shapes.get(m.group(1))
+                if sh:
+                    total += _shape_elems(
+                        ','.join(map(str, sh[1]))) * _DTYPE_BYTES[sh[0]]
+        return total
+
+    def totals(self) -> Dict:
+        flops_dot = 0.0
+        flops_ew = 0.0
+        trans = 0.0
+        hbm_bytes = 0.0
+        fusion_bodies = self._fusion_bodies()
+        coll = {k: dict(count=0.0, bytes=0.0) for k in _COLL_OPS}
+        for name, lines in self.blocks.items():
+            k = self.mult.get(name, 0.0)
+            if k == 0.0:
+                continue
+            top_level = name not in fusion_bodies
+            for ln in lines:
+                if top_level:
+                    hbm_bytes += k * self._line_bytes(ln)
+                if ' dot(' in ln:
+                    flops_dot += k * self._dot_flops(ln)
+                    continue
+                hit = None
+                for op in _COLL_OPS:
+                    if f' {op}(' in ln or f' {op}-start(' in ln:
+                        hit = op
+                        break
+                if hit:
+                    seg = ln.split('=', 1)
+                    seg = seg[1] if len(seg) > 1 else ln
+                    seg = seg.split('(', 1)[0]
+                    nbytes = 0
+                    for dt, dims in _TYPE_RE.findall(seg):
+                        nbytes += _shape_elems(dims) * _DTYPE_BYTES[dt]
+                    coll[hit]['count'] += k
+                    coll[hit]['bytes'] += k * nbytes
+                    continue
+                if any(op in ln for op in _EW_OPS):
+                    rt = _TYPE_RE.search(ln.split('=', 1)[-1])
+                    if rt:
+                        flops_ew += k * _shape_elems(rt.group(2))
+                elif any(op in ln for op in _TRANS_OPS):
+                    rt = _TYPE_RE.search(ln.split('=', 1)[-1])
+                    if rt:
+                        trans += k * _shape_elems(rt.group(2))
+        total_coll = sum(v['bytes'] for v in coll.values())
+        return dict(flops_dot=flops_dot, flops_elementwise=flops_ew,
+                    transcendentals=trans,
+                    flops=flops_dot + flops_ew, hbm_bytes=hbm_bytes,
+                    collectives=coll, collective_bytes=total_coll)
+
+
+def analyze_hlo(text: str) -> Dict:
+    return HloCost(text).totals()

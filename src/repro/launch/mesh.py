@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; tests and benchmarks see the single real device.
+
+Topology (TPU v5e pods):
+- single pod: 16 x 16 = 256 chips, axes ("data", "model") — "data" is the
+  FSDP/ZeRO shard axis, "model" the TP/EP/SP axis (kept within a pod where
+  ICI bandwidth is highest).
+- multi-pod: 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+  "pod" axis carries pure data parallelism (gradient all-reduce over DCI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for multi-device unit tests (8 host devices)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+DATA_AXES_SINGLE = ('data',)
+DATA_AXES_MULTI = ('pod', 'data')
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes a global batch dimension shards over."""
+    return DATA_AXES_MULTI if 'pod' in mesh.axis_names else DATA_AXES_SINGLE

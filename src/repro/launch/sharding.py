@@ -1,0 +1,163 @@
+"""Partition-spec assignment for parameters, optimizer state, batches and
+decode caches.
+
+Baseline policy (hand-tuned per tensor *role*, with divisibility-checked
+fallbacks — the hillclimbed cells in EXPERIMENTS.md §Perf refine these):
+
+- FSDP ("data" axis, 16-way): d_model dims of weight matrices (ZeRO-3).
+- TP   ("model" axis, 16-way): head / ff / expert / vocab dims.
+- the "pod" axis is never used for parameters (pure DP across pods).
+- batch dims shard over ("pod","data"); decode caches shard batch if
+  divisible, else sequence; head_dim is the model-axis fallback when head
+  counts aren't divisible (e.g. arctic's 56 query heads, GQA kv in
+  {1,2,4,8}).
+
+All public functions return trees of ``NamedSharding`` (safe pytree leaves).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else None
+
+
+def auto_spec(shape, mesh, *, skip_leading=0):
+    """Greedy fallback: 'model' then 'data' on the largest divisible dims."""
+    spec = [None] * len(shape)
+    taken = set()
+    for ax in ('model', 'data'):
+        size = _axis_size(mesh, ax)
+        if size is None:
+            continue
+        cands = sorted(
+            (d for d in range(skip_leading, len(shape))
+             if d not in taken and shape[d] % size == 0 and shape[d] >= size),
+            key=lambda d: -shape[d])
+        if cands:
+            spec[cands[0]] = ax
+            taken.add(cands[0])
+    return P(*spec)
+
+
+# role -> preference list of (dim, axis); dims relative to the UNSTACKED
+# tensor (leading scan dim handled by the caller).  First divisible wins,
+# one dim per axis.
+_PARAM_RULES = {
+    'wq':   [(1, 'model'), (2, 'model'), (0, 'data')],
+    'wk':   [(1, 'model'), (2, 'model'), (0, 'data')],
+    'wv':   [(1, 'model'), (2, 'model'), (0, 'data')],
+    'wo':   [(0, 'model'), (1, 'model'), (2, 'data')],
+    'xwq':  [(1, 'model'), (2, 'model'), (0, 'data')],
+    'xwk':  [(1, 'model'), (2, 'model'), (0, 'data')],
+    'xwv':  [(1, 'model'), (2, 'model'), (0, 'data')],
+    'xwo':  [(0, 'model'), (1, 'model'), (2, 'data')],
+    'w_in':   [(1, 'model'), (0, 'data')],
+    'w_gate': [(1, 'model'), (0, 'data')],
+    'w_out':  [(0, 'model'), (1, 'data')],
+    'r_w_in':   [(1, 'model'), (0, 'data')],
+    'r_w_gate': [(1, 'model'), (0, 'data')],
+    'r_w_out':  [(0, 'model'), (1, 'data')],
+    'e_in':   [(0, 'model'), (1, 'data')],
+    'e_gate': [(0, 'model'), (1, 'data')],
+    'e_out':  [(0, 'model'), (2, 'data')],
+    'router': [(0, 'data')],
+    'in_proj':  [(1, 'model'), (0, 'data')],
+    'out_proj': [(0, 'model'), (1, 'data')],
+    'x_proj':   [(0, 'model')],
+    'dt_proj':  [(1, 'model')],
+    'conv_w':   [(1, 'model')],
+    'A_log':    [(0, 'model')],
+    'D':        [(0, 'model')],
+    'dt_bias':  [(0, 'model')],
+    'norm_w':   [(0, 'model')],
+    'embed':   [(0, 'model'), (1, 'model'), (1, 'data')],
+    'unembed': [(0, 'model'), (1, 'model'), (1, 'data')],
+}
+
+_NDIMS = {k: max(d for d, _ in v) + 1 for k, v in _PARAM_RULES.items()}
+
+
+def _spec_for_param(path_names, shape, mesh):
+    name = path_names[-1]
+    rules = _PARAM_RULES.get(name)
+    if rules is None:
+        if len(shape) <= 1:
+            return P()
+        return auto_spec(shape, mesh, skip_leading=0)
+    lead = len(shape) - _NDIMS[name]        # stacked scan dims (0 or 1)
+    if lead < 0:
+        return auto_spec(shape, mesh)
+    spec = [None] * len(shape)
+    used_axes = set()
+    for dim, axis in rules:
+        d = dim + lead
+        size = _axis_size(mesh, axis)
+        if size is None or axis in used_axes or spec[d] is not None:
+            continue
+        if shape[d] % size == 0 and shape[d] >= size:
+            spec[d] = axis
+            used_axes.add(axis)
+    return P(*spec)
+
+
+def param_shardings(params, mesh):
+    """NamedSharding pytree matching the parameter pytree."""
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return NamedSharding(mesh, _spec_for_param(path, tree.shape, mesh))
+    return walk(params, ())
+
+
+def opt_shardings(opt_state, pshard, mesh):
+    """Moments inherit parameter shardings; int8 QTensors fall back to the
+    greedy auto rule (their block dims differ from the parameter's)."""
+    def leaf(m, s):
+        if hasattr(m, 'q') and hasattr(m, 'scale'):     # QTensor
+            return type(m)(
+                q=NamedSharding(mesh, auto_spec(m.q.shape, mesh)),
+                scale=NamedSharding(mesh, auto_spec(m.scale.shape, mesh)))
+        return s
+
+    is_qt = (lambda x: hasattr(x, 'q') and hasattr(x, 'scale'))
+    return {
+        'm': jax.tree.map(leaf, opt_state['m'], pshard, is_leaf=is_qt),
+        'v': jax.tree.map(leaf, opt_state['v'], pshard, is_leaf=is_qt),
+        'count': NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch, mesh):
+    """Shard every input's leading (batch) dim over the data axes when
+    divisible (batch=1 long-context decode stays replicated)."""
+    from .mesh import batch_axes
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def spec(leaf):
+        if leaf.ndim and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return NamedSharding(mesh, P(axes))
+        if leaf.ndim >= 2:
+            return NamedSharding(mesh, auto_spec(leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache, mesh):
+    """Decode caches: greedy auto over trailing dims (batch or sequence on
+    'data', channels/head_dim on 'model'); scan-stack dim never sharded."""
+    def spec(leaf):
+        return NamedSharding(mesh, auto_spec(leaf.shape, mesh,
+                                             skip_leading=1))
+    return jax.tree.map(spec, cache)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,143 @@
+"""Jit-able step functions: train / prefill / decode.
+
+These are the exact functions the dry-run lowers against the production
+meshes and the examples execute on CPU with reduced configs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (decode_step, forward, prefill,
+                                      train_loss)
+from repro.optim.adamw import adamw_init, adamw_update
+
+# per-arch training numerics policy: everything defaults to fp32 master
+# params + fp32 moments; the two largest models trade moment precision
+# (int8 block-quantized) and/or master precision (bf16) for HBM fit —
+# recorded per-cell in EXPERIMENTS.md §Dry-run.
+TRAIN_POLICY = {
+    'arctic-480b': dict(state_dtype='int8', param_dtype='bfloat16',
+                        microbatches=4),
+    'llama-3.2-vision-90b': dict(state_dtype='float32',
+                                 param_dtype='float32', microbatches=8),
+    'seamless-m4t-medium': dict(state_dtype='float32',
+                                param_dtype='float32', microbatches=4),
+    'granite-moe-1b-a400m': dict(state_dtype='float32',
+                                 param_dtype='float32', microbatches=4),
+    'deepseek-7b': dict(state_dtype='float32', param_dtype='float32',
+                        microbatches=2),
+    'glm4-9b': dict(state_dtype='float32', param_dtype='float32',
+                    microbatches=2),
+    'zamba2-7b': dict(state_dtype='float32', param_dtype='float32',
+                      microbatches=2),
+    'falcon-mamba-7b': dict(state_dtype='float32', param_dtype='float32',
+                            microbatches=2),
+}
+
+
+def train_policy(cfg: ModelConfig):
+    pol = dict(state_dtype='float32', param_dtype='float32',
+               microbatches=1)
+    pol.update(TRAIN_POLICY.get(cfg.name, {}))
+    pol.setdefault('microbatches', 1)
+    return pol
+
+
+def cast_params(params, dtype_name: str):
+    if dtype_name == 'float32':
+        return params
+    dt = jnp.bfloat16
+    return jax.tree.map(lambda p: p.astype(dt), params)
+
+
+def act_partition_spec(cfg: ModelConfig, mesh, seq: int):
+    """Residual-stream constraints [B, S, d] as a (sharded, gathered) pair:
+    between groups the stream is sequence-parallel (S over 'model', bounds
+    remat-saved activations); inside a group it is gathered once.
+
+    Only worthwhile when the residual stream is large (d_model >= 4096) —
+    for small-d attention archs the SP transitions cost more collective
+    bytes than the memory saved (gemma3 train_4k regressed 2x) — OR when
+    the backbone is SSM/hybrid: mamba layers are elementwise along S, so
+    the whole state-update pipeline inherits the S-sharding (zamba2's
+    memory term is 15x better with SP; EXPERIMENTS.md §Perf iter 6/9).
+    """
+    from .mesh import batch_axes
+    wants_sp = cfg.d_model >= 4096 or cfg.family in ('ssm', 'hybrid')
+    if seq % mesh.shape.get('model', 1) or not wants_sp:
+        return None
+    ba = batch_axes(mesh)
+    return (P(ba, 'model', None), P(ba, None, None))
+
+
+def make_train_step(cfg: ModelConfig, *, state_dtype='float32',
+                    lr=3e-4, act_spec=None, microbatches: int = 1):
+    """fwd+bwd+AdamW step; with microbatches > 1, gradients accumulate in
+    fp32 over a scan of microbatches (activation transients shrink by the
+    microbatch factor at the cost of re-gathering weights per microbatch —
+    the standard HBM/interconnect trade at 100B scale)."""
+
+    def loss_and_grads(params, batch):
+        def loss_fn(p):
+            return train_loss(cfg, p, batch, remat=True,
+                              act_sharding=act_spec)
+        return jax.value_and_grad(loss_fn)(params)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_acc, grads_acc = carry
+                loss, grads = loss_and_grads(params, mbatch)
+                return (loss_acc + loss,
+                        jax.tree.map(
+                            lambda a, g: a + g.astype(jnp.float32),
+                            grads_acc, grads)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = loss_and_grads(params, batch)
+        new_p, new_o, metrics = adamw_update(
+            grads, opt_state, params, lr=lr, state_dtype=state_dtype)
+        metrics['loss'] = loss
+        return new_p, new_o, metrics
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, batch):
+        return prefill(cfg, params, batch['tokens'],
+                       frontend_embeds=batch.get('frontend'))
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+    return step
+
+
+def init_train_state(cfg: ModelConfig, key, state_dtype='float32',
+                     param_dtype='float32'):
+    from repro.models.transformer import init_params
+    params = cast_params(init_params(cfg, key), param_dtype)
+    opt = adamw_init(params, state_dtype)
+    return params, opt

@@ -1,0 +1,123 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+async checkpointing -> elastic restart.
+
+Runs real steps on whatever devices exist (the production meshes need TPU
+pods; ``--debug-mesh`` runs the same code on host devices).  This is also
+the restart entry point: on startup it restores the latest checkpoint (if
+any) with resharding, so the same command line resumes after failures or
+topology changes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --reduced --steps 20 --batch 8 --seq 128 --ckpt /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.sharding import (batch_shardings, opt_shardings,
+                                   param_shardings)
+from repro.launch.steps import make_train_step, train_policy
+from repro.models.transformer import init_params
+from repro.optim.adamw import adamw_init
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.resilience import ResilienceLog, StragglerPolicy
+
+
+def build_mesh(debug: bool):
+    if debug:
+        n = len(jax.devices())
+        model = 2 if n % 2 == 0 and n > 1 else 1
+        return jax.make_mesh(
+            (n // model, model), ('data', 'model'),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', required=True)
+    ap.add_argument('--reduced', action='store_true')
+    ap.add_argument('--steps', type=int, default=20)
+    ap.add_argument('--batch', type=int, default=8)
+    ap.add_argument('--seq', type=int, default=128)
+    ap.add_argument('--lr', type=float, default=3e-4)
+    ap.add_argument('--ckpt', default='')
+    ap.add_argument('--ckpt-every', type=int, default=10)
+    ap.add_argument('--debug-mesh', action='store_true', default=True)
+    ap.add_argument('--log-every', type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pol = train_policy(cfg)
+    mesh = build_mesh(args.debug_mesh)
+    print(f'arch={cfg.name} mesh={dict(mesh.shape)} '
+          f'policy={pol}', flush=True)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, pol['state_dtype'])
+    pshard = param_shardings(params, mesh)
+    oshard = opt_shardings(opt, pshard, mesh)
+
+    data = SyntheticTokens(vocab=cfg.vocab, seq=args.seq,
+                           global_batch=args.batch)
+    start_step = 0
+    ckpt_root = Path(args.ckpt) if args.ckpt else None
+    checkpointer = ckpt.AsyncCheckpointer()
+    if ckpt_root is not None:
+        last = ckpt.latest_step(ckpt_root)
+        if last is not None:
+            print(f'restoring step {last} (resharding onto current mesh)',
+                  flush=True)
+            state = ckpt.restore(ckpt.step_dir(ckpt_root, last),
+                                 {'params': params, 'opt': opt},
+                                 {'params': pshard, 'opt': oshard})
+            params, opt = state['params'], state['opt']
+            data.restore({'step': last})
+            start_step = last
+
+    step_fn = make_train_step(cfg, state_dtype=pol['state_dtype'],
+                              lr=args.lr)
+    with jax.sharding.set_mesh(mesh):
+        params = jax.device_put(params, pshard)
+        opt = jax.device_put(opt, oshard)
+        jit_step = jax.jit(step_fn,
+                           in_shardings=(pshard, oshard, None),
+                           out_shardings=(pshard, oshard, None),
+                           donate_argnums=(0, 1))
+        stragglers = StragglerPolicy()
+        rlog = ResilienceLog()
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+            params, opt, metrics = jit_step(params, opt, batch)
+            loss = float(metrics['loss'])
+            dt = time.time() - t0
+            stragglers.record_step({'worker0': dt})
+            if step % args.log_every == 0:
+                print(f'step {step:5d} loss {loss:.4f} '
+                      f'gnorm {float(metrics["grad_norm"]):.3f} '
+                      f'{dt * 1e3:.0f} ms', flush=True)
+            if ckpt_root is not None and (step + 1) % args.ckpt_every == 0:
+                checkpointer.save_async(
+                    ckpt.step_dir(ckpt_root, step + 1),
+                    {'params': params, 'opt': opt}, step + 1,
+                    extra=data.state())
+        checkpointer.wait()
+    print('done', flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,193 @@
+"""Attention kernels (pure JAX, sharding-friendly).
+
+- ``flash_attention``: blockwise online-softmax attention (scan over KV
+  blocks, vmap over Q blocks) — never materializes the [Sq, Sk] score
+  matrix, which is what makes the 32k prefill shapes compile within HBM.
+- ``local_attention``: sliding-window attention via chunk + previous-chunk
+  gathering; O(S * W) FLOPs so the local layers of gemma2/gemma3 report
+  honest sub-quadratic rooflines.
+- ``decode_attention``: single-position attention against a (possibly
+  ring-buffered) KV cache.
+
+All support GQA (n_kv <= n_heads), RoPE applied by the caller, optional
+logit soft-capping, and fp32 softmax accumulation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import softcap
+from .shard_utils import constrain
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: [B, bq, G, rep, hd]; k: [B, bk, G, hd] -> [B, G, rep, bq, bk]."""
+    return jnp.einsum('bqgrd,bkgd->bgrqk', q, k)
+
+
+def _divisor_block(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (block size selection)."""
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, causal=True, softcap_val=0.0,
+                    q_offset=0, block_q=512, block_k=1024, window=0):
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, G, hd].  Returns [B, Sq, H, hd].
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (for
+    cross-chunk prefill; 0 for self-attention from the start).
+    ``window``: if > 0, restrict to kpos > qpos - window (sliding window).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    rep = H // G
+    block_q = _divisor_block(Sq, block_q)
+    block_k = _divisor_block(Sk, block_k)
+    import os
+    if not softcap_val and os.environ.get('REPRO_FLASH_VJP') == '1':
+        # custom-VJP path: block-recomputing backward — saves bwd residual
+        # memory (llama-90b: mem term 190s -> 100s) but costs ~7x more
+        # collective bytes under the current sharding (§Perf iter 7:
+        # net-refuted as the default; kept selectable for memory-bound
+        # deployments).
+        from .flash_vjp import flash_mha
+        return flash_mha(q, k, v, causal, window, q_offset, block_q,
+                         block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+
+    qb = (q * scale).reshape(B, nq, block_q, G, rep, hd)
+    kb = k.reshape(B, nk, block_k, G, hd)
+    vb = v.reshape(B, nk, block_k, G, hd)
+
+    def one_q_block(qi, qblk):
+        # qblk: [B, block_q, G, rep, hd]
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            # pin the score-block layout: batch on 'data', kv-head groups
+            # on 'model' when they divide, else the q-block dim.  Without
+            # this the remat'd bwd reshards the fp32 probabilities
+            # (EXPERIMENTS.md §Perf iter 6).
+            s = _gqa_scores(qblk, kblk).astype(jnp.float32)
+            if s.shape[1] % 16 == 0:
+                s = constrain(s, 'data', 'model')
+            else:
+                s = constrain(s, 'data', None, None, 'model')
+            s = softcap(s, softcap_val)
+            if causal or window:
+                qpos = (q_offset + qi * block_q
+                        + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0))
+                kpos = (ki * block_k
+                        + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1))
+                ok = kpos <= qpos if causal else (kpos == kpos)
+                if window:
+                    ok = ok & (qpos - kpos < window)
+                s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum('bgrqk,bkgd->bqgrd', p.astype(v.dtype), vblk)
+            acc_new = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+                       + pv.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, rep, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, rep, block_q), jnp.float32)
+        a0 = jnp.zeros((B, block_q, G, rep, hd), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4)))
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)
+
+    out = jax.vmap(one_q_block, in_axes=(0, 1), out_axes=1)(
+        jnp.arange(nq), qb)
+    return out.reshape(B, Sq, H, hd)
+
+
+def local_attention(q, k, v, *, window, softcap_val=0.0):
+    """Sliding-window causal self-attention (Sq == Sk == S).
+
+    Scans window-sized query chunks; each chunk runs blockwise flash
+    attention over [previous chunk, own chunk] with an exact sliding-
+    window mask.  FLOPs O(S * 2W); peak live set is ONE chunk's flash
+    blocks (the earlier dense [.., W, 2W] score tensor was 275 GB/step
+    for gemma2's prefill_32k — EXPERIMENTS.md §Perf iteration 4).
+    """
+    B, S, H, hd = q.shape
+    _, _, G, _ = k.shape
+    W = min(window, S)
+    pad = (-S) % W
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(a, widths) for a in (q, k, v))
+    Sp = S + pad
+    nc = Sp // W
+    qc = q.reshape(B, nc, W, H, hd).swapaxes(0, 1)     # [nc, B, W, H, hd]
+    kc = k.reshape(B, nc, W, G, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nc, W, G, hd).swapaxes(0, 1)
+
+    bq, bk = min(512, W), min(1024, 2 * W)
+    # chunk 0 has no history
+    out0 = flash_attention(qc[0], kc[0], vc[0], causal=True,
+                           softcap_val=softcap_val, window=W,
+                           block_q=bq, block_k=min(1024, W))
+    if nc == 1:
+        out = out0[:, None]
+    else:
+        def chunk_fn(_, inp):
+            qq, kcur, kpre, vcur, vpre = inp
+            kk = jnp.concatenate([kpre, kcur], axis=1)  # [B, 2W, G, hd]
+            vv = jnp.concatenate([vpre, vcur], axis=1)
+            # q position i sits at absolute offset W + i within kk
+            o = flash_attention(qq, kk, vv, causal=True,
+                                softcap_val=softcap_val, q_offset=W,
+                                window=W, block_q=bq, block_k=bk)
+            return None, o
+
+        _, rest = jax.lax.scan(
+            chunk_fn, None,
+            (qc[1:], kc[1:], kc[:-1], vc[1:], vc[:-1]))
+        out = jnp.concatenate([out0[None], rest], axis=0)
+    out = out.swapaxes(0, 1).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, softcap_val=0.0,
+                     ring_offset=None):
+    """One-token attention against a cache.
+
+    q: [B, 1, H, hd]; k_cache/v_cache: [B, S, G, hd]; cache_len: [B] or
+    scalar — number of valid cache positions (q attends to all of them).
+    ring_offset: if the cache is a ring buffer (sliding window), a [B] or
+    scalar logical position such that slot s holds absolute position
+    ``absolute = s + floor stuff`` — handled by validity mask only.
+    """
+    B, _, H, hd = q.shape
+    _, S, G, _ = k_cache.shape
+    rep = H // G
+    scale = hd ** -0.5
+    qh = (q * scale).reshape(B, G, rep, hd)
+    s = jnp.einsum('bgrd,bkgd->bgrk', qh, k_cache).astype(jnp.float32)
+    s = softcap(s, softcap_val)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, S), 3)
+    valid = slot < jnp.reshape(jnp.asarray(cache_len), (-1, 1, 1, 1))
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum('bgrk,bkgd->bgrd', p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)

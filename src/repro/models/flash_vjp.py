@@ -1,0 +1,158 @@
+"""Flash attention with a custom VJP (block-recomputing backward).
+
+``jax.checkpoint`` around a layer group cannot stop the *transpose* of the
+inner KV scan from saving per-step fp32 probability blocks — on llama-90b
+train_4k that is ~17 GB/layer of bwd residuals (EXPERIMENTS §Perf iter 7).
+The standard flash backward fixes this structurally: save only
+(q, k, v, out, logsumexp), and in the backward recompute each [bq, bk]
+score block on the fly while accumulating dq / dk / dv.
+
+Supports GQA and causal/sliding-window masks.  Soft-capping is NOT
+supported here (its extra tanh-gradient term is easy but the only capped
+archs — gemma2/3 — are small; they use the autodiff path).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .shard_utils import constrain
+
+NEG_INF = -1e30
+
+
+def _mask(qi, ki, bq, bk, q_offset, causal, window):
+    qpos = (q_offset + qi * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= (qpos - kpos) < window
+    return ok
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_mha(q, k, v, causal, window, q_offset, block_q, block_k):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, block_q,
+                        block_k)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    rep = H // G
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+    qb = (q * scale).reshape(B, nq, block_q, G, rep, hd)
+    kb = k.reshape(B, nk, block_k, G, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, G, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_q(qi, qblk):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum('bqgrd,bkgd->bgrqk', qblk,
+                           kblk).astype(jnp.float32)
+            s = constrain(s, 'data', 'model', None, None, None)
+            ok = _mask(qi, ki, block_q, block_k, q_offset, causal, window)
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum('bgrqk,bkgd->bqgrd', p.astype(v.dtype), vblk)
+            acc = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+                   + pv.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, G, rep, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, rep, block_q), jnp.float32)
+        a0 = jnp.zeros((B, block_q, G, rep, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        out = (acc / l.transpose(0, 3, 1, 2)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return out, lse
+
+    outs, lses = jax.vmap(one_q, in_axes=(0, 1), out_axes=(1, 1))(
+        jnp.arange(nq), qb)
+    out = outs.reshape(B, Sq, H, hd)
+    lse = lses  # [B, nq, G, rep, block_q]
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, res, g):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    _, Sk, G, _ = k.shape
+    rep = H // G
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+
+    # blocks travel as scan xs (leading nq/nk dims): dynamic indexing of a
+    # sequence-sharded tensor would all-gather it every step.
+    qb = (q * scale).reshape(B, nq, block_q, G, rep, hd)
+    gb = g.reshape(B, nq, block_q, G, rep, hd)
+    ob = out.reshape(B, nq, block_q, G, rep, hd)
+    qb = constrain(qb, 'data', None, 'model')
+    gb = constrain(gb, 'data', None, 'model')
+    # delta_i = rowsum(dO * O)
+    delta = jnp.sum(gb.astype(jnp.float32) * ob.astype(jnp.float32),
+                    axis=-1)                       # [B, nq, bq, G, rep]
+    kb = k.reshape(B, nk, block_k, G, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, G, hd).transpose(1, 0, 2, 3, 4)
+    qb_t = qb.transpose(1, 0, 2, 3, 4, 5)          # [nq, B, bq, G, rep, hd]
+    gb_t = gb.transpose(1, 0, 2, 3, 4, 5)
+    dlt_t = delta.transpose(1, 0, 3, 4, 2)         # [nq, B, G, rep, bq]
+    lse_t = lse.transpose(1, 0, 2, 3, 4)           # [nq, B, G, rep, bq]
+
+    def kv_step(dq_acc, inp):
+        ki, kblk, vblk = inp
+
+        def q_step(carry, qinp):
+            dk_j, dv_j = carry
+            qi, qblk, gblk, dlt, lse_i = qinp
+            s = jnp.einsum('bqgrd,bkgd->bgrqk', qblk,
+                           kblk).astype(jnp.float32)
+            s = constrain(s, 'data', 'model', None, None, None)
+            ok = _mask(qi, ki, block_q, block_k, q_offset, causal, window)
+            s = jnp.where(ok, s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])          # [b,g,r,q,k]
+            dp = jnp.einsum('bqgrd,bkgd->bgrqk', gblk,
+                            vblk).astype(jnp.float32)
+            ds = p * (dp - dlt[..., None])
+            dq_i = jnp.einsum('bgrqk,bkgd->bqgrd', ds.astype(q.dtype),
+                              kblk).astype(jnp.float32) * scale
+            dk_j = dk_j + jnp.einsum('bgrqk,bqgrd->bkgd',
+                                     ds.astype(q.dtype),
+                                     qblk).astype(jnp.float32)
+            dv_j = dv_j + jnp.einsum('bgrqk,bqgrd->bkgd',
+                                     p.astype(q.dtype),
+                                     gblk).astype(jnp.float32)
+            return (dk_j, dv_j), dq_i
+
+        dk0 = jnp.zeros((B, block_k, G, hd), jnp.float32)
+        dv0 = jnp.zeros((B, block_k, G, hd), jnp.float32)
+        (dk_j, dv_j), dq_contrib = jax.lax.scan(
+            q_step, (dk0, dv0),
+            (jnp.arange(nq), qb_t, gb_t, dlt_t, lse_t))
+        # dq_contrib: [nq, B, bq, G, rep, hd]
+        return dq_acc + dq_contrib, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, block_q, G, rep, hd), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0,
+                                (jnp.arange(nk), kb, vb))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Sk, G, hd)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Sk, G, hd)
+    # note: dk_j scaled q already folded via qb (q*scale) in ds @ q term
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,94 @@
+"""Primitive layers: RMSNorm, RoPE, embeddings, gated MLP, softcap."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                           # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mlp(x, w_in, w_gate, w_out):
+    """SwiGLU when w_gate is not None, classic GeLU MLP otherwise."""
+    h = jnp.einsum('...d,df->...f', x, w_in.astype(x.dtype))
+    if w_gate is not None:
+        g = jnp.einsum('...d,df->...f', x, w_gate.astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum('...f,fd->...d', h, w_out.astype(x.dtype))
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table, cap: float = 0.0):
+    logits = jnp.einsum('...d,vd->...v', x, table.astype(x.dtype))
+    return softcap(logits, cap)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in fp32. logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_lm_loss(hidden, table, labels, cap: float = 0.0,
+                    n_chunks: int = 8):
+    """Mean CE computed from final hidden states WITHOUT materializing the
+    full [B, S, V] logits tensor: sequence-chunked unembed + logsumexp with
+    per-chunk recompute in the backward pass.
+
+    For large-vocab archs (gemma3: 262k) full fp32 logits alone are
+    ~10 GB/device at train_4k — this caps the live set at one chunk.
+    """
+    B, S, d = hidden.shape
+    if S % n_chunks or S < n_chunks:
+        logits = unembed(hidden, table, cap)
+        return cross_entropy(logits, labels)
+    C = S // n_chunks
+    hs = hidden.reshape(B, n_chunks, C, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(h_l):
+        h, l = h_l
+        logits = unembed(h, table, cap).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - ll)
+
+    nll = jax.lax.map(chunk_nll, (hs, ls))
+    return jnp.sum(nll) / (B * S)

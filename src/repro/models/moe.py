@@ -1,0 +1,110 @@
+"""Token-choice top-k Mixture-of-Experts with sort-based capacity dispatch.
+
+No [tokens, experts, capacity] one-hot tensor is ever built (that would be
+~21 GB/shard for arctic-480b): tokens are replicated k ways, sorted by
+expert id, ranked within their expert segment, and scattered into the
+[E, C, d] dispatch buffer.  Tokens beyond capacity are dropped (standard
+token-choice semantics); the router uses fp32 softmax and the combine step
+weights by the (renormalized) top-k gate probabilities.
+
+Under the production mesh the expert axis of ``w_in/w_gate/w_out`` is
+sharded over ``model`` (expert parallelism); XLA inserts the all-to-all-like
+collectives at the dispatch/combine boundaries from the sharding constraints.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _constrain(x, *axes):
+    """Apply a sharding constraint if the surrounding jit has a mesh with
+    the named axes and the dims divide (no-op in plain CPU tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = getattr(mesh, 'axis_names', ()) or ()
+        if not names:
+            return x
+        spec = []
+        for dim, ax in enumerate(axes):
+            if (ax is not None and ax in names
+                    and x.shape[dim] % mesh.shape[ax] == 0
+                    and x.shape[dim] >= mesh.shape[ax]):
+                spec.append(ax)
+            else:
+                spec.append(None)
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def moe_ffn(x, router_w, w_in, w_gate, w_out, *, top_k, capacity_factor):
+    """x: [B, S, d] -> [B, S, d].
+
+    router_w: [d, E]; w_in/w_gate: [E, d, ff]; w_out: [E, ff, d].
+    """
+    B, S, d = x.shape
+    E = router_w.shape[-1]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    gates = jnp.einsum('td,de->te', xt.astype(jnp.float32),
+                       router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)                     # [T, E]
+    top_p, top_e = jax.lax.top_k(probs, top_k)                 # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    C = int(capacity_factor * T * top_k / E)
+    C = max(8, min(C, T))
+
+    # --- dispatch: replicate k ways, sort by expert, rank within expert ---
+    flat_e = top_e.reshape(-1)                                 # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)                                # stable
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(se, length=E)                        # [E]
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * top_k) - seg_start[se]                # rank in expert
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                # overflow bin
+
+    disp = jnp.zeros((E * C + 1, d), dtype=x.dtype)
+    disp = disp.at[slot].add(jnp.where(keep[:, None], xt[st], 0))
+    # dispatch/expert-compute buffers: experts over 'model' (EP), capacity
+    # over 'data' — without this the [E, C_global, d] buffer replicates
+    # (~147 GB/chip for arctic train_4k; EXPERIMENTS.md §Perf iter 5).
+    disp = _constrain(disp[:-1].reshape(E, C, d), 'model', 'data', None)
+
+    # --- expert FFN (batched over the expert axis) ---
+    h = jnp.einsum('ecd,edf->ecf', disp, w_in.astype(x.dtype))
+    if w_gate is not None:
+        g = jnp.einsum('ecd,edf->ecf', disp, w_gate.astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = _constrain(h, 'model', 'data', None)
+    out_e = jnp.einsum('ecf,efd->ecd', h, w_out.astype(x.dtype))
+    out_e = _constrain(out_e, 'model', 'data', None)
+
+    # --- combine: gather back to token order, weight by gate prob ---
+    flat_out = out_e.reshape(E * C, d)
+    gathered = jnp.where(keep[:, None],
+                         flat_out[jnp.clip(slot, 0, E * C - 1)], 0)
+    y = jnp.zeros((T, d), dtype=jnp.float32)
+    y = y.at[st].add(gathered.astype(jnp.float32)
+                     * sp[:, None] * keep[:, None])
+    return y.astype(x.dtype).reshape(B, S, d), probs
+
+
+def load_balance_loss(probs, top_e, n_experts):
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    onehot = jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32)
+    f = onehot.mean(0)
+    p = probs.mean(0)
+    return n_experts * jnp.sum(f * p)

@@ -1,0 +1,39 @@
+"""Mesh-aware optional sharding constraints for model internals.
+
+``constrain(x, *axes)`` applies ``with_sharding_constraint`` when the
+surrounding jit carries a mesh with the named axes and the corresponding
+dims divide; otherwise it is a no-op (plain CPU tests, no mesh).  This is
+how intermediate tensors whose natural axis (e.g. GQA kv heads = 8) cannot
+cover the 16-way model axis get pinned to a *consistent* layout — leaving
+XLA to negotiate leads to full-tensor reshards between the rematerialized
+forward and the backward (measured 5.5 TB/step on llama-90b train_4k).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, *axes):
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = getattr(mesh, 'axis_names', ()) or ()
+        if not names:
+            return x
+        spec = []
+        used = set()
+        for dim, ax in enumerate(axes):
+            ok = (ax is not None and ax in names and ax not in used
+                  and dim < x.ndim
+                  and x.shape[dim] % mesh.shape[ax] == 0
+                  and x.shape[dim] >= mesh.shape[ax])
+            spec.append(ax if ok else None)
+            if ok:
+                used.add(ax)
+        spec += [None] * (x.ndim - len(spec))
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

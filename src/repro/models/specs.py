@@ -1,0 +1,67 @@
+"""Input specifications (ShapeDtypeStruct stand-ins) per (arch x shape).
+
+These drive the multi-pod dry-run: every model input is described as a
+weak-type-correct, shardable abstract value — no device allocation ever
+happens for the full-size configs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import LONG_CONTEXT_OK, SHAPES, ModelConfig
+from .transformer import init_cache, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, batch: int):
+    specs = {
+        'tokens': sds((batch, seq), jnp.int32),
+        'labels': sds((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == 'audio' or cfg.enc_layers:
+        specs['frontend'] = sds((batch, seq, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == 'vision':
+        specs['frontend'] = sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, seq: int, batch: int):
+    specs = {'tokens': sds((batch, seq), jnp.int32)}
+    if cfg.frontend == 'audio' or cfg.enc_layers:
+        specs['frontend'] = sds((batch, seq, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == 'vision':
+        specs['frontend'] = sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, seq: int, batch: int):
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+    return {
+        'tokens': sds((batch, 1), jnp.int32),
+        'pos': sds((), jnp.int32),
+        'cache': cache,
+    }
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Abstract inputs for one (arch, shape) cell, or None if skipped."""
+    s = SHAPES[shape_name]
+    if shape_name == 'long_500k' and cfg.name not in LONG_CONTEXT_OK:
+        return None
+    if s['kind'] == 'train':
+        return train_batch_specs(cfg, s['seq'], s['batch'])
+    if s['kind'] == 'prefill':
+        return prefill_specs(cfg, s['seq'], s['batch'])
+    return decode_specs(cfg, s['seq'], s['batch'])

@@ -1,0 +1,262 @@
+"""Selective state-space layers (Mamba-1 and Mamba-2) with chunked scans.
+
+The core recurrence  h_t = a_t * h_{t-1} + b_t  (diagonal, elementwise over
+arbitrary state dims) is evaluated chunk-parallel: an outer ``lax.scan``
+carries the state across chunks while each chunk is solved with an
+``associative_scan``.  This bounds transient memory to O(chunk) copies of
+the state tensor instead of O(S log S) — the difference between zamba2 /
+falcon-mamba fitting in HBM or not at 4k train and 500k decode shapes.
+
+Decode is the single-step recurrence (O(1) per token) — the reason these
+families are the designated ``long_500k`` architectures.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def chunked_diag_scan(log_a, b, h0, chunk: int = 64):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t along axis 1.
+
+    log_a, b: [B, S, *state]; h0: [B, *state].  Returns (h_all [B,S,*state],
+    h_last).  S must be a multiple of ``chunk`` (caller pads).
+    """
+    B, S = b.shape[:2]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    state_shape = b.shape[2:]
+    la = log_a.reshape(B, nc, chunk, *state_shape).swapaxes(0, 1)
+    bb = b.reshape(B, nc, chunk, *state_shape).swapaxes(0, 1)
+
+    def combine(x, y):
+        (la1, b1), (la2, b2) = x, y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    def chunk_step(h, xs):
+        la_c, b_c = xs                                   # [B, chunk, *state]
+        la_acc, b_acc = jax.lax.associative_scan(
+            combine, (la_c, b_c), axis=1)
+        h_all = jnp.exp(la_acc) * h[:, None] + b_acc
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(chunk_step, h0, (la, bb))
+    h_all = h_chunks.swapaxes(0, 1).reshape(B, S, *state_shape)
+    return h_all, h_last
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: [B, S, d]; w: [K, d].
+
+    state: [B, K-1, d] trailing context (decode); returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, K-1, d_inner]
+    h: jnp.ndarray      # mamba1: [B, d_inner, N]; mamba2: [B, H, N, P]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba): per-channel diagonal A [d_inner, N]
+# ---------------------------------------------------------------------------
+
+def _chunkify(arr, nc, C):
+    """[B, S, ...] -> [nc, B, C, ...] (scan-major), zero-padded."""
+    B, S = arr.shape[:2]
+    pad = nc * C - S
+    if pad:
+        arr = jnp.pad(arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2))
+    return arr.reshape(B, nc, C, *arr.shape[2:]).swapaxes(0, 1)
+
+
+def mamba1_forward(x, p, cfg, state: MambaState | None = None, chunk=64):
+    """x: [B, S, d_model].  p: parameter dict.  Returns (y, new_state).
+
+    The [B, S, d_inner, N] state-update tensors are never materialized at
+    full sequence length: the outer scan forms them per chunk (bounding
+    both footprint and HBM traffic to O(B*chunk*d*N) per step — this is
+    what lets falcon-mamba's train_4k cell fit; EXPERIMENTS.md §Perf).
+    """
+    B, S, _ = x.shape
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    xz = jnp.einsum('bsd,de->bse', x, p['in_proj'].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(
+        xs, p['conv_w'].astype(x.dtype),
+        None if state is None else state.conv)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum('bsd,dr->bsr', xs, p['x_proj'].astype(x.dtype))
+    dt, Bc, Cc = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + N], axis=-1)
+    dt = jnp.einsum('bsr,rd->bsd', dt, p['dt_proj'].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p['dt_bias'].astype(jnp.float32))
+    A = -jnp.exp(p['A_log'].astype(jnp.float32))         # [d_in, N]
+    h0 = (jnp.zeros((B, d_in, N), jnp.float32)
+          if state is None else state.h.astype(jnp.float32))
+
+    if S == 1:  # decode fast path: one recurrence step, no scan
+        la = dt[:, 0, :, None] * A
+        b = (dt[:, 0, :, None] * Bc[:, 0, None, :]
+             * xs[:, 0, :, None].astype(jnp.float32))
+        h = jnp.exp(la) * h0 + b
+        y = jnp.einsum('bdn,bn->bd', h, Cc[:, 0].astype(jnp.float32))
+        y = (y + xs[:, 0].astype(jnp.float32) * p['D'].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        C = min(chunk, S)
+        nc = -(-S // C)
+
+        def chunk_step(h, inp):
+            dt_c, B_c, C_c, x_c = inp                     # [B, C, ...]
+            la = dt_c[..., None] * A                      # [B, C, d, N]
+            b = (dt_c[..., None] * B_c[:, :, None, :].astype(jnp.float32)
+                 * x_c[..., None].astype(jnp.float32))
+            la_acc, b_acc = jax.lax.associative_scan(
+                lambda u, v: (u[0] + v[0],
+                              jnp.exp(v[0]) * u[1] + v[1]),
+                (la, b), axis=1)
+            h_all = jnp.exp(la_acc) * h[:, None] + b_acc
+            y_c = jnp.einsum('bcdn,bcn->bcd', h_all,
+                             C_c.astype(jnp.float32))
+            return h_all[:, -1], y_c
+
+        inputs = (_chunkify(dt, nc, C), _chunkify(Bc, nc, C),
+                  _chunkify(Cc, nc, C), _chunkify(xs, nc, C))
+        h_last, y = jax.lax.scan(chunk_step, h0, inputs)
+        y = y.swapaxes(0, 1).reshape(B, nc * C, d_in)[:, :S]
+        y = y + xs.astype(jnp.float32) * p['D'].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum('bse,ed->bsd', y.astype(x.dtype),
+                     p['out_proj'].astype(x.dtype))
+    return out, MambaState(conv=conv_state, h=h_last.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (zamba2): scalar A per head, state [H, N, P]
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(x, p, cfg, state: MambaState | None = None, chunk=64):
+    """Mamba-2 via the SSD chunked-matmul algorithm.
+
+    Scalar-per-head decay makes the within-chunk solution expressible as a
+    decay-masked attention product (scores = (C_i . B_j) exp(cum_i-cum_j)
+    dt_j), so the [B,S,H,N,P] state tensor of the naive recurrence is
+    NEVER formed: HBM traffic drops ~N*P/(N+P+chunk) (~20x for zamba2) and
+    the work lands on the MXU.  See EXPERIMENTS.md §Perf (zamba2 cell).
+    """
+    B, S, _ = x.shape
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    P = cfg.ssm_head_p
+    H = cfg.ssm_heads
+    zxbcdt = jnp.einsum('bsd,de->bse', x, p['in_proj'].astype(x.dtype))
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, conv_state = causal_conv1d(
+        conv_in, p['conv_w'].astype(x.dtype),
+        None if state is None else state.conv)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p['dt_bias'].astype(jnp.float32))  # [B, S, H]
+    A = -jnp.exp(p['A_log'].astype(jnp.float32))                 # [H]
+    xh = xs.reshape(B, S, H, P)
+    h0 = (jnp.zeros((B, H, N, P), jnp.float32)
+          if state is None else state.h.astype(jnp.float32))
+
+    if S == 1:  # decode fast path
+        la = (dt[:, 0] * A)[:, :, None, None]            # [B, H, 1, 1]
+        b = (dt[:, 0, :, None, None]
+             * Bc[:, 0, None, :, None].astype(jnp.float32)
+             * xh[:, 0, :, None, :].astype(jnp.float32))
+        h = jnp.exp(la) * h0 + b
+        y = jnp.einsum('bhnp,bn->bhp', h, Cc[:, 0].astype(jnp.float32))
+        y = y[:, None] + xh.astype(jnp.float32) * p['D'].astype(jnp.float32)[..., None]
+        h_last = h
+    else:
+        C = min(chunk, S)
+        nc = -(-S // C)
+
+        def chunk_step(h, inp):
+            dt_c, B_c, C_c, x_c = inp   # [B,C,H], [B,C,N], [B,C,N], [B,C,H,P]
+            la = dt_c * A                               # [B, C, H] (<= 0)
+            cum = jnp.cumsum(la, axis=1)                # [B, C, H]
+            # intra-chunk: decay-masked attention over positions
+            seg = cum[:, :, None, :] - cum[:, None, :, :]   # [B, i, j, H]
+            tri = jnp.tril(jnp.ones((C, C), bool))
+            decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+            cb = jnp.einsum('bin,bjn->bij', C_c.astype(jnp.float32),
+                            B_c.astype(jnp.float32))
+            scores = cb[..., None] * decay * dt_c[:, None, :, :]
+            y_c = jnp.einsum('bijh,bjhp->bihp', scores,
+                             x_c.astype(jnp.float32))
+            # inter-chunk: contribution of the carried state
+            y_c = y_c + (jnp.exp(cum)[..., None]
+                         * jnp.einsum('bin,bhnp->bihp',
+                                      C_c.astype(jnp.float32), h))
+            # state update for the next chunk
+            w = jnp.exp(cum[:, -1:, :] - cum) * dt_c    # [B, C, H]
+            h_new = (jnp.exp(cum[:, -1])[:, :, None, None] * h
+                     + jnp.einsum('bjh,bjn,bjhp->bhnp', w,
+                                  B_c.astype(jnp.float32),
+                                  x_c.astype(jnp.float32)))
+            return h_new, y_c
+
+        inputs = (_chunkify(dt, nc, C), _chunkify(Bc, nc, C),
+                  _chunkify(Cc, nc, C), _chunkify(xh, nc, C))
+        h_last, y = jax.lax.scan(chunk_step, h0, inputs)
+        y = y.swapaxes(0, 1).reshape(B, nc * C, H, P)[:, :S]
+        y = y + xh.astype(jnp.float32) * p['D'].astype(jnp.float32)[..., None]
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype)
+    # grouped RMSNorm before out_proj (mamba2 convention)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1 + p['norm_w'].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum('bse,ed->bsd', y, p['out_proj'].astype(x.dtype))
+    return out, MambaState(conv=conv_state, h=h_last.astype(jnp.float32))
+
+
+def mamba_param_shapes(cfg, kind: str):
+    """Parameter name -> shape for one mamba block."""
+    d, d_in, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    K = cfg.ssm_conv
+    if kind == 'mamba1':
+        return {
+            'in_proj': (d, 2 * d_in),
+            'conv_w': (K, d_in),
+            'x_proj': (d_in, cfg.dt_rank + 2 * N),
+            'dt_proj': (cfg.dt_rank, d_in),
+            'dt_bias': (d_in,),
+            'A_log': (d_in, N),
+            'D': (d_in,),
+            'out_proj': (d_in, d),
+        }
+    H = cfg.ssm_heads
+    return {
+        'in_proj': (d, 2 * d_in + 2 * N + H),
+        'conv_w': (K, d_in + 2 * N),
+        'dt_bias': (H,),
+        'A_log': (H,),
+        'D': (H,),
+        'norm_w': (d_in,),
+        'out_proj': (d_in, d),
+    }

@@ -1,0 +1,532 @@
+"""Unified transformer stack covering all ten assigned architectures.
+
+Key structural decisions (see DESIGN.md):
+
+- **Scan over layer groups.** The per-layer heterogeneity (local/global
+  alternation, cross-attention cadence, MoE-every-layer, mamba backbones)
+  is expressed as a repeating ``pattern`` (period P).  Parameters are
+  stacked ``[n_groups, ...]`` and the stack lowers to ONE ``lax.scan`` whose
+  body applies the P sub-blocks — a 100-layer model compiles like a
+  P-layer model.  ``n_layers % P`` tail layers are applied unrolled.
+- **Hybrid (zamba2)**: the scan body applies P mamba blocks then the
+  *shared* attention block (weights closed over, one copy; per-application
+  KV caches are scanned alongside).
+- **Decode caches**: global attention -> full-length cache; local
+  attention -> ring buffer of window size (O(W) memory at 500k contexts);
+  mamba -> O(1) recurrent state; cross-attention -> precomputed
+  encoder/frontend KV.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import decode_attention, flash_attention, local_attention
+from .config import ModelConfig
+from .layers import (chunked_lm_loss, cross_entropy, embed, mlp, rms_norm,
+                     rope, softcap, unembed)
+from .moe import moe_ffn
+from .ssm import (MambaState, mamba1_forward, mamba2_forward,
+                  mamba_param_shapes)
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _attn_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, H, G, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    return {'wq': (d, H, hd), 'wk': (d, G, hd), 'wv': (d, G, hd),
+            'wo': (H, hd, d)}
+
+
+def _mlp_shapes(cfg: ModelConfig, ff: int) -> Dict[str, tuple]:
+    d = cfg.d_model
+    s = {'w_in': (d, ff), 'w_out': (ff, d)}
+    if cfg.gated_mlp:
+        s['w_gate'] = (d, ff)
+    return s
+
+
+def _block_shapes(cfg: ModelConfig, tag: str) -> Dict[str, tuple]:
+    d = cfg.d_model
+    s: Dict[str, tuple] = {'ln1': (d,)}
+    if tag in ('global', 'local'):
+        s.update(_attn_shapes(cfg))
+        s['ln2'] = (d,)
+        s.update(_mlp_shapes(cfg, cfg.d_ff))
+    elif tag == 'cross':
+        # cross-attention block (vision/audio): cross-attn + MLP
+        s.update({f'x{k}': v for k, v in _attn_shapes(cfg).items()})
+        s['ln2'] = (d,)
+        s.update(_mlp_shapes(cfg, cfg.d_ff))
+    elif tag == 'cross_dec':
+        # enc-dec decoder layer: self-attn + cross-attn + MLP
+        s.update(_attn_shapes(cfg))
+        s['lnx'] = (d,)
+        s.update({f'x{k}': v for k, v in _attn_shapes(cfg).items()})
+        s['ln2'] = (d,)
+        s.update(_mlp_shapes(cfg, cfg.d_ff))
+    elif tag == 'moe':
+        s.update(_attn_shapes(cfg))
+        s['ln2'] = (d,)
+        E, ff = cfg.n_experts, cfg.d_ff
+        s.update({'router': (d, E), 'e_in': (E, d, ff),
+                  'e_out': (E, ff, d)})
+        if cfg.gated_mlp:
+            s['e_gate'] = (E, d, ff)
+        if cfg.dense_ff:
+            s.update({f'r_{k}': v
+                      for k, v in _mlp_shapes(cfg, cfg.dense_ff).items()})
+    elif tag in ('mamba1', 'mamba2'):
+        s.update(mamba_param_shapes(cfg, tag))
+    elif tag == 'enc':
+        # bidirectional encoder layer
+        s.update(_attn_shapes(cfg))
+        s['ln2'] = (d,)
+        s.update(_mlp_shapes(cfg, cfg.d_ff))
+    else:
+        raise ValueError(tag)
+    return s
+
+
+def _init_tree(key, shapes: Dict[str, tuple], dtype, stack: int = 0):
+    out = {}
+    for i, (name, shp) in enumerate(sorted(shapes.items())):
+        k = jax.random.fold_in(key, i)
+        full = (stack,) + shp if stack else shp
+        if name.startswith('ln') or name in ('dt_bias', 'D', 'norm_w'):
+            out[name] = jnp.zeros(full, dtype)
+        elif name == 'A_log':
+            out[name] = jnp.zeros(full, dtype)  # A = -1
+        else:
+            fan_in = shp[0] if len(shp) == 1 else int(np.prod(shp[:-1]))
+            std = min(0.02, fan_in ** -0.5)
+            out[name] = (jax.random.normal(k, full, jnp.float32)
+                         * std).astype(dtype)
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """Full parameter pytree.  Group params are stacked [n_groups, ...]."""
+    dtype = jnp.float32 if cfg.dtype == 'float32' else jnp.float32
+    # master params are fp32; compute casts per-block. (bf16 storage is an
+    # optimizer-level decision, see repro.optim.)
+    n_groups = cfg.n_layers // cfg.period
+    n_tail = cfg.n_layers % cfg.period
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        'embed': _init_tree(keys[0], {'w': (cfg.vocab, cfg.d_model)},
+                            dtype)['w'],
+        'final_ln': jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params['unembed'] = _init_tree(
+            keys[7], {'w': (cfg.vocab, cfg.d_model)}, dtype)['w']
+    groups = {}
+    for i, tag in enumerate(cfg.pattern):
+        groups[f'sub{i}'] = _init_tree(
+            jax.random.fold_in(keys[1], i), _block_shapes(cfg, tag), dtype,
+            stack=n_groups)
+    params['groups'] = groups
+    if n_tail:
+        tail = {}
+        for i in range(n_tail):
+            tag = cfg.pattern[i]
+            tail[f'tail{i}'] = _init_tree(
+                jax.random.fold_in(keys[2], i), _block_shapes(cfg, tag),
+                dtype)
+        params['tail'] = tail
+    if cfg.family == 'hybrid':
+        shapes = _block_shapes(cfg, 'global')
+        params['shared_attn'] = _init_tree(keys[3], shapes, dtype)
+    if cfg.enc_layers:
+        params['encoder'] = {
+            'groups': _init_tree(keys[4], _block_shapes(cfg, 'enc'), dtype,
+                                 stack=cfg.enc_layers),
+            'final_ln': jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def cast_for_compute(params, adt):
+    """Downcast >=2D weights to the compute dtype (norm scales and other
+    vectors stay fp32 — they are cheap and precision-sensitive)."""
+    if adt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(adt)
+        if (hasattr(p, 'ndim') and p.ndim >= 2
+            and p.dtype == jnp.float32) else p,
+        params)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _proj_qkv(cfg, p, h, positions, prefix=''):
+    q = jnp.einsum('bsd,dhk->bshk', h, p[prefix + 'wq'].astype(h.dtype))
+    k = jnp.einsum('bsd,dgk->bsgk', h, p[prefix + 'wk'].astype(h.dtype))
+    v = jnp.einsum('bsd,dgk->bsgk', h, p[prefix + 'wv'].astype(h.dtype))
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_out(p, attn, prefix=''):
+    return jnp.einsum('bshk,hkd->bsd', attn,
+                      p[prefix + 'wo'].astype(attn.dtype))
+
+
+def apply_block(cfg: ModelConfig, p, tag: str, x, positions,
+                cache=None, pos=None, cross_kv=None, enc_out=None,
+                enc_positions=None):
+    """Apply one block.  Training/prefill when cache is None; decode
+    otherwise.  Returns (x, new_cache)."""
+    new_cache = cache
+    if tag in ('mamba1', 'mamba2'):
+        h = rms_norm(x, p['ln1'], cfg.norm_eps)
+        fwd = mamba1_forward if tag == 'mamba1' else mamba2_forward
+        state = None if cache is None else MambaState(**cache)
+        y, new_state = fwd(h, p, cfg, state)
+        new_cache = dict(conv=new_state.conv, h=new_state.h)
+        return x + y, new_cache
+
+    if tag == 'cross':
+        h = rms_norm(x, p['ln1'], cfg.norm_eps)
+        q = jnp.einsum('bsd,dhk->bshk', h, p['xwq'].astype(h.dtype))
+        if cross_kv is not None:
+            xk, xv = cross_kv
+        else:
+            xk = jnp.einsum('bsd,dgk->bsgk', enc_out,
+                            p['xwk'].astype(h.dtype))
+            xv = jnp.einsum('bsd,dgk->bsgk', enc_out,
+                            p['xwv'].astype(h.dtype))
+        attn = flash_attention(q, xk, xv, causal=False,
+                               softcap_val=cfg.softcap_attn)
+        x = x + _attn_out(p, attn, 'x')
+        h2 = rms_norm(x, p['ln2'], cfg.norm_eps)
+        x = x + mlp(h2, p['w_in'], p.get('w_gate'), p['w_out'])
+        return x, new_cache
+
+    # --- blocks with (causal) self-attention ---
+    h = rms_norm(x, p['ln1'], cfg.norm_eps)
+    q, k, v = _proj_qkv(cfg, p, h, positions)
+
+    if cache is None:  # train / prefill
+        if tag == 'local' and cfg.sliding_window:
+            attn = local_attention(q, k, v, window=cfg.sliding_window,
+                                   softcap_val=cfg.softcap_attn)
+        elif tag == 'enc':
+            attn = flash_attention(q, k, v, causal=False,
+                                   softcap_val=cfg.softcap_attn)
+        else:
+            attn = flash_attention(q, k, v, causal=True,
+                                   softcap_val=cfg.softcap_attn)
+        # cache-worthy output for prefill: ring-sliced for local layers.
+        # NOTE ring alignment: decode writes slot pos % W; prefill slot i
+        # holds absolute position S-W+i, consistent iff W | S (all assigned
+        # shapes satisfy this; see DESIGN.md).
+        if tag == 'local' and cfg.sliding_window:
+            W = cfg.sliding_window
+            S = k.shape[1]
+            kw, vw = k[:, -W:], v[:, -W:]
+            if S < W:
+                padw = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+                kw, vw = jnp.pad(kw, padw), jnp.pad(vw, padw)
+            new_cache = dict(k=kw, v=vw)
+        else:
+            new_cache = dict(k=k, v=v)
+    else:  # decode: update cache, attend to it
+        W = cache['k'].shape[1]
+        slot = pos % W if tag == 'local' else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache['k'],
+                                                 k.astype(cache['k'].dtype),
+                                                 slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache['v'],
+                                                 v.astype(cache['v'].dtype),
+                                                 slot, axis=1)
+        cache_len = jnp.minimum(pos + 1, W)
+        attn = decode_attention(q, ck, cv, cache_len,
+                                softcap_val=cfg.softcap_attn)
+        new_cache = dict(k=ck, v=cv)
+    x = x + _attn_out(p, attn)
+
+    if tag == 'cross_dec':
+        hx = rms_norm(x, p['lnx'], cfg.norm_eps)
+        qx = jnp.einsum('bsd,dhk->bshk', hx, p['xwq'].astype(hx.dtype))
+        if cross_kv is not None:
+            xk, xv = cross_kv
+        else:
+            xk = jnp.einsum('bsd,dgk->bsgk', enc_out,
+                            p['xwk'].astype(hx.dtype))
+            xv = jnp.einsum('bsd,dgk->bsgk', enc_out,
+                            p['xwv'].astype(hx.dtype))
+        attn = flash_attention(qx, xk, xv, causal=False,
+                               softcap_val=cfg.softcap_attn)
+        x = x + _attn_out(p, attn, 'x')
+
+    h2 = rms_norm(x, p['ln2'], cfg.norm_eps)
+    if tag == 'moe':
+        y, _ = moe_ffn(h2, p['router'], p['e_in'], p.get('e_gate'),
+                       p['e_out'], top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor)
+        if cfg.dense_ff:
+            y = y + mlp(h2, p['r_w_in'], p.get('r_w_gate'), p['r_w_out'])
+        x = x + y
+    else:
+        x = x + mlp(h2, p['w_in'], p.get('w_gate'), p['w_out'])
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full stacks
+# ---------------------------------------------------------------------------
+
+
+def _encoder_forward(cfg, params, enc_embeds):
+    """Bidirectional encoder over frontend embeddings (enc-dec archs)."""
+    x = enc_embeds.astype(cfg.adtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        x, _ = apply_block(cfg, lp, 'enc', x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params['encoder']['groups'])
+    return rms_norm(x, params['encoder']['final_ln'], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frontend_embeds=None,
+            remat: bool = True, collect_cache: bool = False,
+            act_sharding=None, return_hidden: bool = False):
+    """Training/prefill forward pass.
+
+    Returns (logits, caches) — caches is a pytree of per-layer (k, v)
+    stacks when collect_cache (prefill), else None.
+    """
+    adt = cfg.adtype
+    # Cast parameters to compute dtype ONCE, before the layer scan: the
+    # FSDP all-gathers inside the loop then move bf16, not fp32 master
+    # weights (2x less interconnect traffic; EXPERIMENTS.md §Perf iter 1).
+    params = cast_for_compute(params, adt)
+    x = embed(tokens, params['embed']).astype(adt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), adt)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encoder_forward(cfg, params, frontend_embeds)
+    cross_src = (enc_out if cfg.enc_layers else
+                 (frontend_embeds.astype(adt)
+                  if frontend_embeds is not None else None))
+
+    def group_body(x, gp):
+        kvs = {}
+        if act_sharding is not None:
+            # explicit sequence-parallel transition: ONE all-gather of the
+            # sequence axis at group entry (XLA otherwise re-gathers inside
+            # every einsum — measured 16x more collective bytes).
+            x = jax.lax.with_sharding_constraint(x, act_sharding[1])
+        for i, tag in enumerate(cfg.pattern):
+            x, aux = apply_block(cfg, gp[f'sub{i}'], tag, x, positions,
+                                 enc_out=cross_src)
+            if collect_cache and aux is not None and tag != 'cross':
+                kvs[f'sub{i}'] = aux
+        if cfg.family == 'hybrid':
+            x, aux = apply_block(cfg, params['shared_attn'], 'global', x,
+                                 positions)
+            if collect_cache:
+                kvs['shared'] = aux
+        if act_sharding is not None:
+            # scatter back: the remat-saved residual stream stays sharded
+            # 1/model-axis per chip between groups.
+            x = jax.lax.with_sharding_constraint(x, act_sharding[0])
+        return x, (kvs if collect_cache else None)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    x, group_caches = jax.lax.scan(body, x, params['groups'])
+    tail_caches = {}
+    for i in range(cfg.n_layers % cfg.period):
+        x, aux = apply_block(cfg, params['tail'][f'tail{i}'],
+                             cfg.pattern[i], x, positions,
+                             enc_out=cross_src)
+        if collect_cache and aux is not None and cfg.pattern[i] != 'cross':
+            tail_caches[f'tail{i}'] = aux
+    x = rms_norm(x, params['final_ln'], cfg.norm_eps)
+    table = params['embed'] if cfg.tie_embeddings else params['unembed']
+    if return_hidden:
+        return x, table
+    logits = unembed(x, table, cfg.softcap_final)
+    if not collect_cache:
+        return logits, None
+    caches = dict(group_caches or {})
+    caches.update(tail_caches)
+    # cross K/V: precomputed once from the encoder / frontend stream
+    if cross_src is not None:
+        xk_list, xv_list = [], []
+        for i, tag in enumerate(cfg.pattern):
+            if tag in ('cross', 'cross_dec'):
+                gp = params['groups'][f'sub{i}']
+                xk_list.append(jnp.einsum(
+                    'bsd,ndgk->nbsgk', cross_src,
+                    gp['xwk'].astype(cross_src.dtype)))
+                xv_list.append(jnp.einsum(
+                    'bsd,ndgk->nbsgk', cross_src,
+                    gp['xwv'].astype(cross_src.dtype)))
+        if xk_list:
+            caches['cross_k'] = jnp.concatenate(xk_list, axis=0)
+            caches['cross_v'] = jnp.concatenate(xv_list, axis=0)
+    return logits, caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, frontend_embeds=None):
+    """Process a full prompt; returns (last-position logits, decode cache)."""
+    logits, cache = forward(cfg, params, tokens,
+                            frontend_embeds=frontend_embeds, remat=False,
+                            collect_cache=True)
+    return logits[:, -1:], cache
+
+
+def train_loss(cfg: ModelConfig, params, batch, remat: bool = True,
+               act_sharding=None, loss_chunks: int = 8):
+    hidden, table = forward(cfg, params, batch['tokens'],
+                            frontend_embeds=batch.get('frontend'),
+                            remat=remat, act_sharding=act_sharding,
+                            return_hidden=True)
+    return chunked_lm_loss(hidden, table, batch['labels'],
+                           cap=cfg.softcap_final, n_chunks=loss_chunks)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_entry(cfg, tag, B, S, dtype):
+    G, hd = cfg.n_kv, cfg.hd
+    if tag in ('mamba1', 'mamba2'):
+        K = cfg.ssm_conv
+        if tag == 'mamba1':
+            return dict(conv=jnp.zeros((B, K - 1, cfg.d_inner), dtype),
+                        h=jnp.zeros((B, cfg.d_inner, cfg.ssm_state),
+                                    jnp.float32))
+        return dict(conv=jnp.zeros((B, K - 1,
+                                    cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                    h=jnp.zeros((B, cfg.ssm_heads, cfg.ssm_state,
+                                 cfg.ssm_head_p), jnp.float32))
+    if tag == 'cross':
+        return None
+    W = min(cfg.sliding_window, S) if tag == 'local' else S
+    return dict(k=jnp.zeros((B, W, G, hd), dtype),
+                v=jnp.zeros((B, W, G, hd), dtype))
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, s_cross: int | None = None):
+    """Decode cache pytree, stacked [n_groups, ...] per sub-position.
+
+    s_cross: length of the cross-attention source stream (encoder frames
+    for enc-dec, vision patches for VLM).  Defaults: VLM ->
+    cfg.n_frontend_tokens; enc-dec -> S (prompt-length audio)."""
+    dtype = cfg.adtype
+    n_groups = cfg.n_layers // cfg.period
+
+    def stack(entry):
+        if entry is None:
+            return None
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape),
+            entry)
+
+    cache: Dict[str, Any] = {}
+    for i, tag in enumerate(cfg.pattern):
+        e = _cache_entry(cfg, tag, B, S, dtype)
+        if e is not None:
+            cache[f'sub{i}'] = stack(e)
+    for i in range(cfg.n_layers % cfg.period):
+        e = _cache_entry(cfg, cfg.pattern[i], B, S, dtype)
+        if e is not None:
+            cache[f'tail{i}'] = e
+    if cfg.family == 'hybrid':
+        cache['shared'] = stack(_cache_entry(cfg, 'global', B, S, dtype))
+    if cfg.enc_layers or cfg.family == 'vlm':
+        # precomputed cross K/V per cross-layer (from encoder / frontend)
+        n_cross = sum(1 for t in cfg.attn_layer_types
+                      if t in ('cross', 'cross_dec'))
+        if s_cross is None:
+            s_cross = (cfg.n_frontend_tokens if cfg.family == 'vlm' else S)
+        cache['cross_k'] = jnp.zeros((n_cross, B, s_cross, cfg.n_kv, cfg.hd),
+                                     dtype)
+        cache['cross_v'] = jnp.zeros((n_cross, B, s_cross, cfg.n_kv, cfg.hd),
+                                     dtype)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decoding step.  tokens: [B, 1]; pos: scalar int32 (uniform batch
+    position).  Returns (logits [B, 1, V], new_cache)."""
+    adt = cfg.adtype
+    params = cast_for_compute(params, adt)
+    x = embed(tokens, params['embed']).astype(adt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), adt)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    n_cross_per_period = sum(1 for t in cfg.pattern
+                             if t in ('cross', 'cross_dec'))
+
+    def group_body(carry, xs):
+        x, = carry
+        gp, gcache, gi = xs
+        new_gcache = dict(gcache)
+        ci = 0
+        for i, tag in enumerate(cfg.pattern):
+            ckv = None
+            if tag in ('cross', 'cross_dec'):
+                idx = gi * n_cross_per_period + ci
+                ckv = (cache['cross_k'][idx], cache['cross_v'][idx])
+                ci += 1
+            x, nc = apply_block(cfg, gp[f'sub{i}'], tag, x, positions,
+                                cache=gcache.get(f'sub{i}'), pos=pos,
+                                cross_kv=ckv)
+            if nc is not None and f'sub{i}' in gcache:
+                new_gcache[f'sub{i}'] = nc
+        if cfg.family == 'hybrid':
+            x, nc = apply_block(cfg, params['shared_attn'], 'global', x,
+                                positions, cache=gcache['shared'], pos=pos)
+            new_gcache['shared'] = nc
+        return (x,), new_gcache
+
+    n_groups = cfg.n_layers // cfg.period
+    group_caches = {k: v for k, v in cache.items()
+                    if k.startswith('sub') or k == 'shared'}
+    (x,), new_group_caches = jax.lax.scan(
+        group_body, (x,),
+        (params['groups'], group_caches, jnp.arange(n_groups)))
+    new_cache = dict(cache)
+    new_cache.update(new_group_caches)
+    for i in range(cfg.n_layers % cfg.period):
+        tag = cfg.pattern[i]
+        ckv = None
+        if tag in ('cross', 'cross_dec'):
+            idx = n_groups * n_cross_per_period
+            ckv = (cache['cross_k'][idx], cache['cross_v'][idx])
+        x, nc = apply_block(cfg, params['tail'][f'tail{i}'], tag, x,
+                            positions, cache=cache.get(f'tail{i}'), pos=pos,
+                            cross_kv=ckv)
+        if nc is not None:
+            new_cache[f'tail{i}'] = nc
+    x = rms_norm(x, params['final_ln'], cfg.norm_eps)
+    table = params['embed'] if cfg.tie_embeddings else params['unembed']
+    logits = unembed(x, table, cfg.softcap_final)
+    return logits, new_cache

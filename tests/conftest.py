@@ -1,0 +1,53 @@
+"""Shared pytest fixtures.
+
+NOTE: fp64 is enabled here for oracle-grade SNAP comparisons.  The LM model
+code uses explicit float32/bfloat16 dtypes so this does not affect it.  The
+512-device dry-run is NOT run under pytest (see launch/dryrun.py) — tests see
+the single real CPU device unless they spawn subprocesses themselves.
+"""
+import jax
+
+jax.config.update('jax_enable_x64', True)
+
+import numpy as np
+import pytest
+
+from repro.core.snap import SnapConfig
+
+
+def make_cluster(natoms=8, nnbor=8, rcut=3.0, seed=0, box=2.8):
+    """Random cluster + padded neighbor lists (open boundary)."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, box, (natoms, 3))
+    nbr_idx = np.zeros((natoms, nnbor), np.int32)
+    mask = np.zeros((natoms, nnbor), bool)
+    disp = np.zeros((natoms, nnbor, 3))
+    for i in range(natoms):
+        c = 0
+        for j in range(natoms):
+            if i == j:
+                continue
+            d = pos[j] - pos[i]
+            r = np.linalg.norm(d)
+            if 1e-9 < r < rcut and c < nnbor:
+                nbr_idx[i, c] = j
+                mask[i, c] = True
+                disp[i, c] = d
+                c += 1
+    shifts = np.zeros((natoms, nnbor, 3))
+    return pos, disp, nbr_idx, mask, shifts
+
+
+@pytest.fixture(scope='session')
+def small_cluster():
+    return make_cluster()
+
+
+@pytest.fixture(scope='session')
+def cfg_2j4():
+    return SnapConfig(twojmax=4, rcut=3.0)
+
+
+@pytest.fixture(scope='session')
+def cfg_2j8():
+    return SnapConfig(twojmax=8, rcut=3.0)

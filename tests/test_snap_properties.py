@@ -1,0 +1,109 @@
+"""Property-based invariants of the SNAP descriptor (hypothesis).
+
+Bispectrum components are rotation-invariant scalar triple products
+(paper eq. 2); they must also be invariant to neighbor permutations, and the
+forces must be equivariant under rotation.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.snap import (SnapConfig, compute_bispectrum,
+                             energy_forces_adjoint)
+
+CFG = SnapConfig(twojmax=4, rcut=3.0)
+
+
+def _random_rotation(rng):
+    q = rng.normal(size=4)
+    q /= np.linalg.norm(q)
+    w, x, y, z = q
+    return np.array([
+        [1 - 2 * (y * y + z * z), 2 * (x * y - z * w), 2 * (x * z + y * w)],
+        [2 * (x * y + z * w), 1 - 2 * (x * x + z * z), 2 * (y * z - x * w)],
+        [2 * (x * z - y * w), 2 * (y * z + x * w), 1 - 2 * (x * x + y * y)],
+    ])
+
+
+def _neighbors(rng, n=6):
+    d = rng.uniform(-1.0, 1.0, (n, 3))
+    r = np.linalg.norm(d, axis=1, keepdims=True)
+    # keep radii safely inside (0.3, 0.9*rcut)
+    d = d / r * (0.3 + 0.6 * CFG.rcut * rng.uniform(0.3, 0.95, (n, 1)))
+    return d
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rotation_invariance_of_B(seed):
+    rng = np.random.default_rng(seed)
+    d = _neighbors(rng)
+    R = _random_rotation(rng)
+    dr = d @ R.T
+    m = np.ones((1, d.shape[0]), bool)
+    b1 = compute_bispectrum(CFG, d[None, :, 0], d[None, :, 1],
+                            d[None, :, 2], m)
+    b2 = compute_bispectrum(CFG, dr[None, :, 0], dr[None, :, 1],
+                            dr[None, :, 2], m)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2),
+                               rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_permutation_invariance_of_B(seed):
+    rng = np.random.default_rng(seed)
+    d = _neighbors(rng)
+    perm = rng.permutation(d.shape[0])
+    m = np.ones((1, d.shape[0]), bool)
+    b1 = compute_bispectrum(CFG, d[None, :, 0], d[None, :, 1],
+                            d[None, :, 2], m)
+    dp = d[perm]
+    b2 = compute_bispectrum(CFG, dp[None, :, 0], dp[None, :, 1],
+                            dp[None, :, 2], m)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2),
+                               rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_force_rotation_equivariance(seed):
+    """F(R x) == R F(x) for the adjoint pipeline."""
+    rng = np.random.default_rng(seed)
+    d = _neighbors(rng)
+    R = _random_rotation(rng)
+    beta = jnp.asarray(rng.normal(size=CFG.ncoeff))
+    n = d.shape[0]
+    m = np.ones((1, n), bool)
+    nbr = np.arange(1, n + 1, dtype=np.int32)[None, :]
+    # single center atom with n one-way neighbors (natoms = n+1 for scatter)
+    def forces(dd):
+        dx = np.zeros((n + 1, n)); dy = np.zeros((n + 1, n)); dz = np.zeros((n + 1, n))
+        mm = np.zeros((n + 1, n), bool)
+        dx[0], dy[0], dz[0] = dd[:, 0], dd[:, 1], dd[:, 2]
+        mm[0] = True
+        nb = np.zeros((n + 1, n), np.int32)
+        nb[0] = nbr
+        _, _, f = energy_forces_adjoint(CFG, beta, 0.0, dx, dy, dz, nb, mm)
+        return np.asarray(f)
+    f1 = forces(d)
+    f2 = forces(d @ R.T)
+    np.testing.assert_allclose(f2, f1 @ R.T, rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.2, 0.45), st.integers(0, 1000))
+def test_switching_function_cutoff(frac, seed):
+    """Neighbors beyond rcut contribute nothing (masked or not)."""
+    rng = np.random.default_rng(seed)
+    d = _neighbors(rng)
+    m = np.ones((1, d.shape[0]), bool)
+    b1 = compute_bispectrum(CFG, d[None, :, 0], d[None, :, 1],
+                            d[None, :, 2], m)
+    far = np.array([[CFG.rcut * (1.01 + frac), 0.0, 0.0]])
+    d2 = np.concatenate([d, far])
+    m2 = np.ones((1, d2.shape[0]), bool)
+    b2 = compute_bispectrum(CFG, d2[None, :, 0], d2[None, :, 1],
+                            d2[None, :, 2], m2)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2),
+                               rtol=1e-12, atol=1e-12)

@@ -1,0 +1,96 @@
+"""Input specs + sharding rule unit tests against the production mesh
+geometry (verified abstractly — no 512-device runtime needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.sharding import _spec_for_param, auto_spec
+from repro.models.config import LONG_CONTEXT_OK, SHAPES
+from repro.models.specs import input_specs, params_specs
+
+
+class FakeMesh:
+    axis_names = ('data', 'model')
+    shape = {'data': 16, 'model': 16}
+
+
+MESH = FakeMesh()
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide its mesh axis — the invariant that
+    makes the 512-device lowering legal."""
+    cfg = get_config(arch)
+    tree = params_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    n_sharded = 0
+    for path, leaf in flat:
+        names = tuple(str(getattr(p, 'key', p)) for p in path)
+        spec = _spec_for_param(names, leaf.shape, MESH)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = MESH.shape[ax]
+            assert leaf.shape[dim] % size == 0, (names, leaf.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+def test_big_params_are_sharded(arch):
+    """No parameter > 64 MB may stay fully replicated (HBM discipline)."""
+    cfg = get_config(arch)
+    tree = params_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        nbytes = int(np.prod(leaf.shape)) * 4
+        if nbytes < 64e6:
+            continue
+        names = tuple(str(getattr(p, 'key', p)) for p in path)
+        spec = _spec_for_param(names, leaf.shape, MESH)
+        assert any(ax is not None for ax in spec), (names, leaf.shape)
+
+
+def test_auto_spec_greedy():
+    assert auto_spec((32, 64), MESH) == P('data', 'model')
+    assert auto_spec((7, 64), MESH) == P(None, 'model')
+    assert auto_spec((7, 5), MESH) == P(None, None)
+    assert auto_spec((4, 32, 16), MESH, skip_leading=1) == \
+        P(None, 'model', 'data')
+
+
+@pytest.mark.parametrize('arch', ARCHS)
+@pytest.mark.parametrize('shape', list(SHAPES))
+def test_input_specs_cells(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, shape)
+    if shape == 'long_500k' and arch not in LONG_CONTEXT_OK:
+        assert specs is None
+        return
+    assert specs is not None
+    s = SHAPES[shape]
+    if s['kind'] == 'train':
+        assert specs['tokens'].shape == (s['batch'], s['seq'])
+        assert specs['labels'].shape == (s['batch'], s['seq'])
+    elif s['kind'] == 'prefill':
+        assert specs['tokens'].shape == (s['batch'], s['seq'])
+    else:
+        assert specs['tokens'].shape == (s['batch'], 1)
+        assert 'cache' in specs
+        leaves = jax.tree.leaves(specs['cache'])
+        assert leaves, 'decode cell must carry a cache'
+        total_gb = sum(int(np.prod(x.shape)) *
+                       np.dtype(x.dtype).itemsize for x in leaves) / 1e9
+        # cache must fit a pod (256 x 16 GB) even before sharding details
+        assert total_gb < 4096, (arch, shape, total_gb)
+
+
+def test_all_40_cells_enumerated():
+    n = 0
+    for arch in ARCHS:
+        for shape in SHAPES:
+            n += 1
+    assert n == 40
