@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, snap_problem, time_fn
+from .common import emit, snap_problem, time_fn, write_bench_json
 
 
-def run(quick=True):
+def run(quick=True, out_dir=None):
     natoms = 128
     twojmax = 8
     cfg, beta, disp, nbr_idx, mask = snap_problem(natoms, twojmax)
@@ -25,7 +25,8 @@ def run(quick=True):
     from repro.core import bispectrum as bs
     from repro.core.snap import _pair_geometry
     from repro.core.ulist import compute_ulist, compute_ulisttot
-    from repro.kernels.ops import (snap_dedr_kernel, snap_ui_kernel)
+    from repro.kernels.ops import (snap_dedr_kernel, snap_ui_kernel,
+                                   snap_yi_kernel)
 
     dx, dy, dz = (jnp.asarray(disp[..., i]) for i in range(3))
     maskj = jnp.asarray(mask)
@@ -42,12 +43,30 @@ def run(quick=True):
     emit(f'kernel_snap_u_jnp_2J{twojmax}_N{natoms}', t_ur, '')
 
     ut = ui_r()
+
+    # per-stage Y comparison: jnp chunked scatter-add vs Pallas one-hot
+    # matmul kernel (interpret mode) at matched layout/inputs
+    y_k = jax.jit(lambda u: snap_yi_kernel(cfg, u, beta, dtype=jnp.float32,
+                                           interpret=True))
+    t_yk = time_fn(y_k, ut)
+    y_r = jax.jit(lambda u: bs.compute_ylist(u, beta, idx))
+    t_yr = time_fn(y_r, ut)
+    emit(f'kernel_snap_y_pallas_interp_2J{twojmax}_N{natoms}', t_yk, '')
+    emit(f'kernel_snap_y_jnp_2J{twojmax}_N{natoms}', t_yr, '')
+
     y = bs.compute_ylist(ut, beta, idx)
     de_k = jax.jit(lambda y: snap_dedr_kernel(cfg, dx, dy, dz, maskj, y,
                                               dtype=jnp.float32,
                                               interpret=True))
     t_dek = time_fn(de_k, y)
     emit(f'kernel_fused_de_pallas_interp_2J{twojmax}_N{natoms}', t_dek, '')
+
+    write_bench_json('kernel_stages', dict(
+        twojmax=twojmax, natoms=natoms, interpret=True,
+        snap_u=dict(pallas_s=t_uk, jnp_s=t_ur),
+        snap_y=dict(pallas_s=t_yk, jnp_s=t_yr),
+        fused_de=dict(pallas_s=t_dek),
+    ), out_dir)
 
     # VMEM working-set accounting (the paper's occupancy argument, Sec VI)
     iu = idx.idxu_max

@@ -1,0 +1,101 @@
+"""MD grind-time benchmark: katom-steps/s through the full NVE driver.
+
+The paper's figure of merit applied to the whole MD hot loop (not just one
+force call): neighbor rebuilds + velocity-Verlet + force pipeline, for all
+three implementations, plus the scan-vs-host loop comparison that isolates
+the cost of per-step host round trips.  Emits CSV rows and persists
+``BENCH_md_grind.json`` so the perf trajectory is tracked PR-over-PR.
+
+Quick mode uses a small 2J4 problem so the interpret-mode Pallas pipeline
+stays tractable on CPU; --paper scales to the 2J8 geometry.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, write_bench_json
+
+
+def _fresh_state(natoms, temp=300.0):
+    from repro.md.integrate import MDState, init_velocities
+    from repro.md.lattice import paper_box, perturb
+    pos, box = paper_box(natoms=natoms)
+    pos = perturb(pos, 0.02, seed=2)
+    return MDState(pos=pos.copy(),
+                   vel=init_velocities(len(pos), temp, seed=4), box=box)
+
+
+def _time_md(cfg, beta, natoms, n_steps, impl, loop, rebuild_every,
+             max_nbors, force_kwargs=None):
+    """Wall-clock a full run_nve pass; warmup run compiles via fn_cache."""
+    from repro.md.integrate import run_nve
+    cache = {}
+    kw = dict(impl=impl, loop=loop, rebuild_every=rebuild_every,
+              max_nbors=max_nbors, log_every=max(1, n_steps // 2),
+              dt=0.0005, fn_cache=cache, force_kwargs=force_kwargs or {})
+    run_nve(cfg, beta, 0.0, _fresh_state(natoms), n_steps, **kw)  # warmup
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run_nve(cfg, beta, 0.0, _fresh_state(natoms), n_steps, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(quick=True, out_dir=None):
+    from repro.core.snap import SnapConfig
+    if quick:
+        # N=54 amortizes the per-segment host boundary enough for the scan
+        # win to be visible even on CPU (dispatch-dominated at N=16)
+        natoms, twojmax, rcut, max_nbors = 54, 4, 3.0, 12
+        n_steps, rebuild_every = 16, 8
+    else:
+        natoms, twojmax, rcut, max_nbors = 128, 8, 4.7, 40
+        n_steps, rebuild_every = 20, 10
+    cfg = SnapConfig(twojmax=twojmax, rcut=rcut)
+    rng = np.random.default_rng(1)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff) * 5e-3)
+
+    results = dict(natoms=natoms, twojmax=twojmax, n_steps=n_steps,
+                   rebuild_every=rebuild_every, impls={}, loops={})
+
+    force_kw = {'kernel': dict(interpret=True)}
+    for impl in ('baseline', 'adjoint', 'kernel'):
+        t = _time_md(cfg, beta, natoms, n_steps, impl, 'scan',
+                     rebuild_every, max_nbors, force_kw.get(impl))
+        ka = natoms * n_steps / t / 1e3
+        results['impls'][impl] = dict(seconds=t, katom_steps_per_s=ka)
+        emit(f'md_grind_{impl}_scan_2J{twojmax}_N{natoms}', t / n_steps,
+             f'{ka:.2f}katom-steps/s')
+
+    # scan-vs-host A/B on the adjoint impl: same force pipeline, the only
+    # delta is whether the inner loop round-trips through host numpy
+    for loop in ('scan', 'host'):
+        t = _time_md(cfg, beta, natoms, n_steps, 'adjoint', loop,
+                     rebuild_every, max_nbors)
+        ka = natoms * n_steps / t / 1e3
+        results['loops'][loop] = dict(seconds=t, katom_steps_per_s=ka)
+        emit(f'md_grind_adjoint_{loop}loop_2J{twojmax}_N{natoms}',
+             t / n_steps, f'{ka:.2f}katom-steps/s')
+    speedup = (results['loops']['host']['seconds']
+               / results['loops']['scan']['seconds'])
+    results['scan_speedup_over_host'] = speedup
+    emit('md_grind_scan_speedup_over_host', 0.0, f'{speedup:.2f}x')
+
+    write_bench_json('md_grind', results, out_dir)
+    return results
+
+
+if __name__ == '__main__':
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--paper', action='store_true')
+    args = ap.parse_args()
+    import jax
+    jax.config.update('jax_enable_x64', True)
+    print('name,us_per_call,derived')
+    run(quick=not args.paper)

@@ -1,7 +1,10 @@
-"""Shared benchmark utilities: timing, problem setup, CSV emission."""
+"""Shared benchmark utilities: timing, problem setup, CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
@@ -38,3 +41,26 @@ def snap_problem(natoms, twojmax, rcut=4.7, nnbor=26):
 def emit(name, seconds, derived=''):
     us = seconds * 1e6
     print(f'{name},{us:.1f},{derived}')
+
+
+def write_bench_json(name, payload, out_dir=None):
+    """Persist one benchmark section as ``BENCH_<name>.json``.
+
+    The JSON artifacts are the machine-readable perf trajectory tracked
+    PR-over-PR (CI smoke-validates their presence); CSV stdout stays the
+    human-readable view.  Returns the written path.
+    """
+    out_dir = out_dir or os.environ.get('BENCH_OUT_DIR', '.')
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f'BENCH_{name}.json')
+    doc = dict(
+        name=name,
+        unix_time=time.time(),
+        platform=jax.devices()[0].platform,
+        machine=platform.machine(),
+        results=payload,
+    )
+    with open(path, 'w') as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    print(f'bench_json_written,0.0,{path}')
+    return path

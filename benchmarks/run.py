@@ -35,6 +35,10 @@ def main() -> None:
     from . import b_stage_progression
     b_stage_progression.run(quick)
 
+    print('# -- MD grind time: full NVE driver, scan vs host loop --')
+    from . import b_md_grind
+    b_md_grind.run(quick)
+
     print('# -- paper Sec VI: Pallas kernel stages (interpret mode) --')
     from . import b_kernels
     b_kernels.run(quick)

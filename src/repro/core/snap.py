@@ -105,6 +105,19 @@ def assemble_forces(dedr, nbr_idx, mask, natoms):
 # adjoint pipeline (paper Sec. IV / Listing 5)
 # ---------------------------------------------------------------------------
 
+def bzero_shift(cfg: SnapConfig, beta, dtype):
+    """Per-atom energy shift from the bzero self-contribution: bzero . beta.
+
+    Shared by the jnp and kernel-layout energy contractions so the bzero
+    convention has exactly one implementation.
+    """
+    if not cfg.bzero_flag:
+        return 0.0
+    idx = cfg.index
+    bz = np.array([idx.bzero[t[2]] for t in idx.idxb_triples])
+    return jnp.asarray(bz, dtype=dtype) @ beta.astype(dtype)
+
+
 def energy_from_ylist(cfg: SnapConfig, ulisttot, ylist, beta, beta0):
     """Per-atom energy directly from the adjoint:
 
@@ -120,11 +133,7 @@ def energy_from_ylist(cfg: SnapConfig, ulisttot, ylist, beta, beta0):
     e_raw = (2.0 / 3.0) * jnp.sum(
         idx.dedr_weight * (ulisttot.real * ylist.real
                            + ulisttot.imag * ylist.imag), axis=-1)
-    shift = 0.0
-    if cfg.bzero_flag:
-        bz = np.array([idx.bzero[t[2]] for t in idx.idxb_triples])
-        shift = jnp.asarray(bz, dtype=e_raw.dtype) @ beta.astype(e_raw.dtype)
-    return beta0 + e_raw - shift
+    return beta0 + e_raw - bzero_shift(cfg, beta, e_raw.dtype)
 
 
 def energy_forces_adjoint(cfg: SnapConfig, beta, beta0, dx, dy, dz,
@@ -236,6 +245,6 @@ def energy_forces(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx, mask,
                                       nbr_idx, mask, **kw)
     if impl == 'kernel':
         from repro.kernels import ops as kops
-        return kops.energy_forces_kernel(cfg, beta, beta0, dx, dy, dz,
-                                         nbr_idx, mask, **kw)
+        return kops.snap_force_pipeline(cfg, beta, beta0, dx, dy, dz,
+                                        nbr_idx, mask, **kw)
     raise ValueError(f'unknown impl {impl!r}; choose from {IMPLEMENTATIONS}')

@@ -1,3 +1,17 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# SNAP kernel suite (paper Sec. VI): snap_u (Wigner recursion),
+# snap_y (adjoint one-hot-matmul contraction), snap_fused_de[_half]
+# (dual-number dU + force contraction).  ``ops.snap_force_pipeline``
+# chains them in one canonical [*, natoms_pad] device layout.
+
+from .ops import (energy_forces_kernel, snap_dedr_kernel,
+                  snap_force_pipeline, snap_ui_kernel, snap_yi_kernel)
+from .snap_y import snap_y_pallas, y_coef
+
+__all__ = [
+    'energy_forces_kernel', 'snap_dedr_kernel', 'snap_force_pipeline',
+    'snap_ui_kernel', 'snap_yi_kernel', 'snap_y_pallas', 'y_coef',
+]

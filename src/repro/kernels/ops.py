@@ -4,24 +4,27 @@ energy/forces pipeline (``impl='kernel'`` in :func:`repro.core.snap.energy_force
 The wrappers own all layout plumbing: [natoms, nnbor] padded neighbor lists
 in, physics out — identical signatures to the pure-jnp pipelines so the MD
 driver and benchmarks can swap implementations freely.
+
+``snap_force_pipeline`` is the hot path: after the single entry conversion
+into the canonical kernel layout ([*, natoms_pad] planes, atoms on lanes),
+U -> Y -> fused dE runs entirely on-device in that layout — no complex
+reassembly, transpose, or re-pad between stages (see DESIGN.md).  The only
+layout conversions are the entry ([natoms, nnbor] -> [nnbor, 4, natoms_pad])
+and the exit (per-pair dE -> global force assembly).
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bispectrum as bs
 from repro.core.geometry import sanitize_displacements
-from repro.core.indices import build_index
-from repro.core.snap import SnapConfig, assemble_forces, energy_from_ylist
+from repro.core.snap import SnapConfig, assemble_forces, bzero_shift
 
 from .common import LANES, default_interpret
 from .snap_fused_de import snap_fused_de_pallas
 from .snap_u import snap_u_pallas
+from .snap_y import Y_TILE, snap_y_pallas, y_coef
 
 
 def _kernel_layout(cfg: SnapConfig, dx, dy, dz, mask, dtype):
@@ -40,20 +43,111 @@ def _kernel_layout(cfg: SnapConfig, dx, dy, dz, mask, dtype):
     return disp, ok, natoms
 
 
+def _self_planes(cfg: SnapConfig, dtype):
+    """Wigner self-contribution as a lane-broadcastable [idxu_max, 1] plane."""
+    idx = cfg.index
+    v = np.zeros(idx.idxu_max)
+    v[idx.self_diag] = cfg.wself
+    return jnp.asarray(v, dtype)[:, None]
+
+
+def _dedr_fn(variant: str):
+    if variant == 'half':
+        from .snap_fused_de_half import snap_fused_de_half_pallas as fn
+        return fn
+    return snap_fused_de_pallas
+
+
+def energy_from_ylist_lanes(cfg: SnapConfig, ut_r, ut_i, y_r, y_i,
+                            beta, beta0):
+    """Per-atom energy in kernel layout: (2/3) sum_jju w Re(conj(U) Y).
+
+    All operands are [idxu_max, natoms_pad] planes; the reduction runs over
+    the sublane (jju) axis so the energy never leaves the kernel layout.
+    Mirrors :func:`repro.core.snap.energy_from_ylist` exactly.
+    """
+    idx = cfg.index
+    w = jnp.asarray(idx.dedr_weight, ut_r.dtype)[:, None]
+    e_raw = (2.0 / 3.0) * jnp.sum(w * (ut_r * y_r + ut_i * y_i), axis=0)
+    return beta0 + e_raw - bzero_shift(cfg, beta, e_raw.dtype)
+
+
+def snap_force_pipeline(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
+                        mask, dtype=jnp.float32, interpret=None,
+                        with_energy=True, variant: str = 'half',
+                        y_tile: int = Y_TILE):
+    """Zero-relayout kernel pipeline: Pallas U -> Pallas Y -> Pallas fused dE.
+
+    Every inter-stage tensor stays in the canonical [*, natoms_pad] device
+    layout; the per-entry Y coefficient (cg * y_fac * beta gather, no atom
+    axis) is the only stage input computed at the JAX level.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    natoms = dx.shape[0]
+    disp, ok, _ = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
+
+    ut_r, ut_i = snap_u_pallas(
+        disp, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
+    ut_r = ut_r + _self_planes(cfg, dtype)           # elementwise, in-layout
+
+    coef = y_coef(beta, cfg.twojmax, y_tile).astype(dtype)
+    y_r, y_i = snap_y_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
+                             tile=y_tile, interpret=interpret)
+
+    dedr = _dedr_fn(variant)(
+        disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
+
+    # pipeline exit: per-pair dE back to [natoms, nnbor, 3] force assembly
+    dedr_pairs = dedr[:, :3, :natoms].transpose(2, 0, 1)
+    forces = assemble_forces(dedr_pairs, nbr_idx, ok, natoms)
+    if not with_energy:
+        return None, None, forces
+    e_atom = energy_from_ylist_lanes(cfg, ut_r, ut_i, y_r, y_i,
+                                     beta, beta0)[:natoms]
+    return jnp.sum(e_atom), e_atom, forces
+
+
+# the dispatcher-facing name; kept as an alias for existing callers/tests
+energy_forces_kernel = snap_force_pipeline
+
+
+# ---------------------------------------------------------------------------
+# per-stage wrappers (tests / benchmarks; each owns its own layout plumbing)
+# ---------------------------------------------------------------------------
+
 def snap_ui_kernel(cfg: SnapConfig, dx, dy, dz, mask, dtype=jnp.float32,
                    interpret=None):
     """Ulisttot via the Pallas kernel: complex [natoms, idxu_max]."""
     if interpret is None:
         interpret = default_interpret()
-    idx = cfg.index
     disp, ok, natoms = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
     ut_r, ut_i = snap_u_pallas(
         disp, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
         rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
-    ut = (ut_r[:, :natoms] + 1j * ut_i[:, :natoms]).T
-    self_vec = np.zeros(idx.idxu_max)
-    self_vec[idx.self_diag] = cfg.wself
-    return ut + jnp.asarray(self_vec, dtype=ut.dtype)
+    ut_r = ut_r + _self_planes(cfg, dtype)
+    return (ut_r[:, :natoms] + 1j * ut_i[:, :natoms]).T
+
+
+def snap_yi_kernel(cfg: SnapConfig, ulisttot, beta, dtype=jnp.float32,
+                   interpret=None, y_tile: int = Y_TILE):
+    """Adjoint Y via the Pallas kernel: complex [natoms, idxu_max].
+
+    Layout-converting wrapper around :func:`snap_y_pallas` for parity tests
+    and stage benchmarks; the pipeline itself never leaves plane layout.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    natoms = ulisttot.shape[0]
+    pad = (-natoms) % LANES
+    ut_r = jnp.pad(ulisttot.real.T.astype(dtype), [(0, 0), (0, pad)])
+    ut_i = jnp.pad(ulisttot.imag.T.astype(dtype), [(0, 0), (0, pad)])
+    coef = y_coef(beta, cfg.twojmax, y_tile).astype(dtype)
+    y_r, y_i = snap_y_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
+                             tile=y_tile, interpret=interpret)
+    return (y_r[:, :natoms] + 1j * y_i[:, :natoms]).T
 
 
 def snap_dedr_kernel(cfg: SnapConfig, dx, dy, dz, mask, ylist,
@@ -71,32 +165,7 @@ def snap_dedr_kernel(cfg: SnapConfig, dx, dy, dz, mask, ylist,
     pad = disp.shape[-1] - natoms
     y_r = jnp.pad(ylist.real.T.astype(dtype), [(0, 0), (0, pad)])
     y_i = jnp.pad(ylist.imag.T.astype(dtype), [(0, 0), (0, pad)])
-    if variant == 'half':
-        from .snap_fused_de_half import snap_fused_de_half_pallas as fn
-    else:
-        fn = snap_fused_de_pallas
-    dedr = fn(disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut,
-              rmin0=cfg.rmin0, rfac0=cfg.rfac0,
-              switch_flag=cfg.switch_flag, interpret=interpret)
+    dedr = _dedr_fn(variant)(
+        disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
     return dedr[:, :3, :natoms].transpose(2, 0, 1)
-
-
-def energy_forces_kernel(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
-                         mask, dtype=jnp.float32, interpret=None,
-                         with_energy=True):
-    """Kernel-backed adjoint pipeline: Pallas U -> jnp Y -> Pallas fused dE.
-
-    compute_Y stays a JAX-level scatter-add: its irregular Clebsch-Gordan
-    sums are the one stage whose GPU-specific optimization (warp-level load
-    balancing) has no TPU analogue — see DESIGN.md hardware-adaptation table.
-    """
-    idx = cfg.index
-    natoms = dx.shape[0]
-    ut = snap_ui_kernel(cfg, dx, dy, dz, mask, dtype, interpret)
-    y = bs.compute_ylist(ut, beta, idx)
-    dedr = snap_dedr_kernel(cfg, dx, dy, dz, mask, y, dtype, interpret)
-    forces = assemble_forces(dedr, nbr_idx, mask, natoms)
-    if not with_energy:
-        return None, None, forces
-    e_atom = energy_from_ylist(cfg, ut, y, beta, beta0)
-    return jnp.sum(e_atom), e_atom, forces

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: SNAP compute_Yi (paper Sec. IV adjoint, Sec. VI kernel).
+
+The adjoint accumulation Y[jju] += cg * beta[jjb] * U[src1] * U[src2] is the
+one irregular-gather stage of the pipeline.  The GPU implementations balance
+it with warp-level work distribution (LAMMPS-KOKKOS, Kokkos-MTP); the TPU
+adaptation here turns the static COO Clebsch-Gordan tables into *one-hot
+matmuls* so the whole contraction runs on the MXU:
+
+    Y  =  sum_tiles  S_t @ ((G1_t @ U) * (G2_t @ U))        (complex)
+
+where G1/G2 are [tile, idxu_max] one-hot gather matrices built in-kernel
+from int32 index rows (broadcasted-iota compare — no dynamic indexing), and
+S folds the scatter destination one-hot with the per-entry coefficient
+``cg * y_fac * beta[y_jjb]``.  The beta factor is a runtime [nnz] gather
+done once at the JAX level (no natoms axis), so the kernel itself is
+beta-agnostic and Z is never materialized — the paper's compute_Yi fusion.
+
+Layout: atoms on the 128-wide lane axis ([idxu_max, natoms_pad] planes,
+identical to snap_u / snap_fused_de), grid = (lane tiles, COO tiles) with
+the partial-Y accumulator revisiting its VMEM block across the inner COO
+axis.  Index tables stream through VMEM one [1, tile] row at a time.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.indices import build_index
+
+from .common import LANES
+
+Y_TILE = 512   # COO entries per grid step; 128-multiple keeps tiles aligned
+
+
+@lru_cache(maxsize=16)
+def _y_coo_tiles(twojmax: int, tile: int):
+    """Static COO tables padded to [ntiles, tile] (pad rows carry cg = 0).
+
+    Returns (src1, src2, dest, cg, jjz): flat-u gather indices, flat-u
+    scatter destination (idxz -> jju remap already applied), raw CG product,
+    and the idxz row of each entry (for the runtime beta gather).
+    """
+    idx = build_index(twojmax)
+    nnz = idx.z_coo_dest.shape[0]
+    ntiles = max(1, -(-nnz // tile))
+    pad = ntiles * tile - nnz
+
+    def p(a, dtype):
+        return np.pad(a, (0, pad)).astype(dtype).reshape(ntiles, tile)
+
+    return (p(idx.z_coo_src1, np.int32),
+            p(idx.z_coo_src2, np.int32),
+            p(idx.idxz_jju[idx.z_coo_dest], np.int32),
+            p(idx.z_coo_cg, np.float64),
+            p(idx.z_coo_dest, np.int32))
+
+
+def _snap_y_kernel(src1_ref, src2_ref, dest_ref, coef_ref, ut_r_ref, ut_i_ref,
+                   y_r_ref, y_i_ref, *, idxu_max, tile, dtype):
+    """One (lane tile, COO tile) step of the one-hot-matmul contraction.
+
+    src/dest/coef refs: [1, tile]; ut/y refs: [idxu_max, LANES].
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        y_r_ref[...] = jnp.zeros((idxu_max, LANES), dtype)
+        y_i_ref[...] = jnp.zeros((idxu_max, LANES), dtype)
+
+    iu_g = jax.lax.broadcasted_iota(jnp.int32, (tile, idxu_max), 1)
+    g1 = (src1_ref[0, :][:, None] == iu_g).astype(dtype)
+    g2 = (src2_ref[0, :][:, None] == iu_g).astype(dtype)
+
+    ut_r = ut_r_ref[...]
+    ut_i = ut_i_ref[...]
+    u1r = jnp.dot(g1, ut_r, preferred_element_type=dtype)
+    u1i = jnp.dot(g1, ut_i, preferred_element_type=dtype)
+    u2r = jnp.dot(g2, ut_r, preferred_element_type=dtype)
+    u2i = jnp.dot(g2, ut_i, preferred_element_type=dtype)
+    prod_r = u1r * u2r - u1i * u2i
+    prod_i = u1r * u2i + u1i * u2r
+
+    iu_s = jax.lax.broadcasted_iota(jnp.int32, (idxu_max, tile), 0)
+    s = ((dest_ref[0, :][None, :] == iu_s).astype(dtype)
+         * coef_ref[0, :][None, :])
+    y_r_ref[...] += jnp.dot(s, prod_r, preferred_element_type=dtype)
+    y_i_ref[...] += jnp.dot(s, prod_i, preferred_element_type=dtype)
+
+
+def y_coef(beta, twojmax: int, tile: int = Y_TILE):
+    """Runtime per-COO-entry coefficient ``cg * y_fac * beta[y_jjb]``.
+
+    beta: [idxb_max] global linear-model coefficients.  Returns [ntiles,
+    tile] in beta's dtype — the only beta-dependent kernel input.
+    """
+    idx = build_index(twojmax)
+    _, _, _, cg, jjz = _y_coo_tiles(twojmax, tile)
+    betaj = jnp.asarray(idx.y_fac) * beta[..., idx.y_jjb]
+    return jnp.asarray(cg) * betaj[..., jjz]
+
+
+def snap_y_pallas(ut_r, ut_i, coef, *, twojmax, tile=Y_TILE, interpret=True):
+    """ut_r/ut_i: [idxu_max, natoms_pad] Ulisttot planes (self included);
+    coef: [ntiles, tile] from :func:`y_coef`.
+
+    Returns (y_r, y_i): [idxu_max, natoms_pad] adjoint planes, half-plane
+    filled exactly like :func:`repro.core.bispectrum.compute_ylist`.
+    """
+    idx = build_index(twojmax)
+    iu, natoms_pad = ut_r.shape
+    assert iu == idx.idxu_max and natoms_pad % LANES == 0
+    dtype = ut_r.dtype
+    src1, src2, dest, _, _ = _y_coo_tiles(twojmax, tile)
+    ntiles = src1.shape[0]
+    assert coef.shape == (ntiles, tile), (coef.shape, (ntiles, tile))
+    coef = coef.astype(dtype)
+
+    kernel = partial(_snap_y_kernel, idxu_max=idx.idxu_max, tile=tile,
+                     dtype=dtype)
+    grid = (natoms_pad // LANES, ntiles)
+    coo_spec = pl.BlockSpec((1, tile), lambda i, t: (t, 0))
+    u_spec = pl.BlockSpec((idx.idxu_max, LANES), lambda i, t: (0, i))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[coo_spec, coo_spec, coo_spec, coo_spec, u_spec, u_spec],
+        out_specs=[u_spec, u_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype),
+            jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype)],
+        interpret=interpret,
+    )(jnp.asarray(src1), jnp.asarray(src2), jnp.asarray(dest), coef,
+      ut_r, ut_i)

@@ -125,7 +125,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 else s.dtype),
             params_abs)
     pshard = param_shardings(params_abs, mesh)
-    with jax.sharding.set_mesh(mesh):
+    from repro.launch.compat import set_mesh
+    with set_mesh(mesh):
         if kind == 'train':
             opt_abs = jax.eval_shape(
                 partial(adamw_init, state_dtype=pol['state_dtype']),

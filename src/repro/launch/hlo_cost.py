@@ -140,10 +140,19 @@ class HloCost:
             return 0.0
         res_elems = _shape_elems(rt.group(2))
         args = res_seg[1]
-        om = re.match(r'\s*%([\w\.\-]+)', args)
+        # lhs operand: either typed inline ("f32[64,128]{1,0} %x") — the
+        # format this XLA emits — or a bare "%x" resolved via the symbol
+        # table (older text format)
+        lhs_dims = None
+        tm = _TYPE_RE.match(args.lstrip())
+        if tm:
+            lhs_dims = _dims_list(tm.group(2))
+        else:
+            om = re.match(r'\s*%?([\w\.\-]+)', args)
+            if om and om.group(1) in self.shapes:
+                lhs_dims = self.shapes[om.group(1)][1]
         contract = 1
-        if om and om.group(1) in self.shapes:
-            lhs_dims = self.shapes[om.group(1)][1]
+        if lhs_dims is not None:
             cm = _DNUM_RE.search(line)
             if cm:
                 for ci in _dims_list(cm.group(1)):

@@ -37,9 +37,8 @@ def build_mesh(debug: bool):
     if debug:
         n = len(jax.devices())
         model = 2 if n % 2 == 0 and n > 1 else 1
-        return jax.make_mesh(
-            (n // model, model), ('data', 'model'),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import make_auto_mesh
+        return make_auto_mesh((n // model, model), ('data', 'model'))
     from repro.launch.mesh import make_production_mesh
     return make_production_mesh()
 
@@ -90,7 +89,8 @@ def main(argv=None):
 
     step_fn = make_train_step(cfg, state_dtype=pol['state_dtype'],
                               lr=args.lr)
-    with jax.sharding.set_mesh(mesh):
+    from repro.launch.compat import set_mesh
+    with set_mesh(mesh):
         params = jax.device_put(params, pshard)
         opt = jax.device_put(opt, oshard)
         jit_step = jax.jit(step_fn,

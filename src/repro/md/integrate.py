@@ -2,8 +2,13 @@
 
 The MD loop is the LAMMPS-shaped outer driver: neighbor lists rebuild on
 the host every ``rebuild_every`` steps (fixed-shape padded lists), while the
-per-step force evaluation runs as one jitted JAX function — baseline,
-adjoint, or Pallas-kernel implementation, selected by ``impl``.
+inner velocity-Verlet loop between rebuilds runs as ONE jitted
+``jax.lax.scan`` segment — positions, velocities, and forces stay on device,
+with per-step displacement recomputation (``pos[nbr] + shift - pos``) inside
+the scan.  The host only touches data at rebuild boundaries (pull positions,
+rebuild topology) and reads per-step energies back for logging from the
+scan's stacked outputs.  ``loop='host'`` keeps the legacy per-step driver
+for A/B benchmarking (see benchmarks/b_md_grind.py).
 
 Thermodynamic output (temperature, PE, virial pressure) reproduces the
 verification methodology of the paper's Sec. VI ("comparing the
@@ -14,7 +19,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +64,37 @@ def make_force_fn(cfg: SnapConfig, beta, beta0, impl='adjoint', **kw):
     return force_fn
 
 
+def make_segment_fn(cfg: SnapConfig, beta, beta0, dt, mass,
+                    impl='adjoint', n_sub: int = 10, **kw):
+    """One jitted scan over ``n_sub`` velocity-Verlet steps.
+
+    Carry = (pos, vel, f) on device; per-step outputs (pe, ke) come back
+    stacked so logging needs no extra device round trips.  Displacements are
+    recomputed on device from the rebuild-time topology + image shifts (the
+    same contract as the autodiff oracle's ``make_energy_fn``).
+    """
+    acc_scale = ACC_CONV / mass
+
+    @jax.jit
+    def segment(pos, vel, f, nbr_idx, shifts, mask):
+        def step(carry, _):
+            pos, vel, f = carry
+            vel = vel + (0.5 * dt * acc_scale) * f
+            pos = pos + dt * vel
+            disp = pos[nbr_idx] + shifts - pos[:, None, :]
+            e, _, f_new = energy_forces(
+                cfg, beta, beta0, disp[..., 0], disp[..., 1], disp[..., 2],
+                nbr_idx, mask, impl=impl, **kw)
+            vel = vel + (0.5 * dt * acc_scale) * f_new
+            ke = (0.5 * mass / ACC_CONV) * jnp.sum(vel * vel)
+            return (pos, vel, f_new), (e, ke)
+
+        (pos, vel, f), (pe, ke) = jax.lax.scan(
+            step, (pos, vel, f), None, length=n_sub)
+        return pos, vel, f, pe, ke
+    return segment
+
+
 def virial_pressure(dedr_like_forces, pos, box):
     """Rough isotropic virial from forces (diagnostic only)."""
     vol = float(np.prod(box))
@@ -70,27 +106,120 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
             dt: float = 0.0005, mass: float = W_MASS,
             impl: str = 'adjoint', rebuild_every: int = 10,
             max_nbors: int = 40, log_every: int = 10,
-            force_kwargs: Dict | None = None):
-    """NVE loop; returns (state, list of thermo dicts)."""
-    force_fn = make_force_fn(cfg, beta, beta0, impl,
-                             **(force_kwargs or {}))
+            loop: str = 'scan', force_kwargs: Dict | None = None,
+            fn_cache: Dict | None = None):
+    """NVE loop; returns (state, list of thermo dicts).
+
+    loop='scan' (default) runs each inter-rebuild segment as one on-device
+    ``lax.scan``; loop='host' steps on the host (one jitted force call per
+    step).  Both evaluate the force exactly once per step (plus once at
+    step 0) — identical trajectories up to image-convention round-off.
+
+    fn_cache: optional dict reused across calls to keep the jitted force /
+    segment functions (and their compilations) alive — benchmarks pass the
+    same dict to warmup and timed runs.  The cached closures bake in the
+    physics parameters, so reuse is only valid for identical (cfg, beta,
+    beta0, dt, mass, impl, force_kwargs) — enforced via a fingerprint.
+    """
+    if fn_cache is not None:
+        fp = (cfg, np.asarray(beta).tobytes(), float(beta0), float(dt),
+              float(mass), impl,
+              tuple(sorted((force_kwargs or {}).items())))
+        if fn_cache.setdefault('fingerprint', fp) != fp:
+            raise ValueError(
+                'fn_cache was built for different physics parameters '
+                '(cfg/beta/dt/mass/impl/...); pass a fresh dict')
+    if loop == 'scan':
+        return _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass,
+                             impl, rebuild_every, max_nbors, log_every,
+                             force_kwargs, fn_cache)
+    if loop == 'host':
+        return _run_nve_host(cfg, beta, beta0, state, n_steps, dt, mass,
+                             impl, rebuild_every, max_nbors, log_every,
+                             force_kwargs, fn_cache)
+    raise ValueError(f"unknown loop {loop!r}; choose 'scan' or 'host'")
+
+
+def _log_rows(thermo, seg_pe, seg_ke, first_step, base_step, n_atoms,
+              n_steps, log_every):
+    """Append thermo dicts for the logged steps of one scan segment."""
+    for k, (pe, ke) in enumerate(zip(seg_pe, seg_ke)):
+        it = first_step + k
+        if it % log_every == 0 or it == n_steps - 1:
+            ke = float(ke)
+            T = 2.0 * ke / (3.0 * n_atoms * KB)
+            thermo.append(dict(step=base_step + it + 1, T=T, ke=ke,
+                               pe=float(pe), etot=float(pe) + ke))
+
+
+def _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass, impl,
+                  rebuild_every, max_nbors, log_every, force_kwargs,
+                  fn_cache=None):
+    kw = force_kwargs or {}
+    cache = fn_cache if fn_cache is not None else {}
+    if 'force' not in cache:
+        cache['force'] = make_force_fn(cfg, beta, beta0, impl, **kw)
+    force_fn = cache['force']
+    n_atoms = len(state.pos)
+    segments = cache.setdefault('segments', {})   # n_sub -> jitted segment
+    thermo = []
+    pos = vel = f = None
+    it = 0
+    while it < n_steps:
+        n_sub = min(rebuild_every, n_steps - it)
+        # host boundary: rebuild topology at current positions
+        pos_h = np.asarray(pos) if pos is not None else state.pos
+        nbr_idx, mask, disp, shifts = brute_neighbors(
+            pos_h, state.box, cfg.rcut, max_nbors)
+        if f is None:   # first segment: seed the force carry once
+            _, f = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
+                            nbr_idx, mask)
+            pos = jnp.asarray(pos_h)
+            vel = jnp.asarray(state.vel)
+        if n_sub not in segments:
+            segments[n_sub] = make_segment_fn(
+                cfg, beta, beta0, dt, mass, impl, n_sub, **kw)
+        pos, vel, f, seg_pe, seg_ke = segments[n_sub](
+            pos, vel, f, jnp.asarray(nbr_idx), jnp.asarray(shifts),
+            jnp.asarray(mask))
+        _log_rows(thermo, np.asarray(seg_pe), np.asarray(seg_ke), it,
+                  state.step, n_atoms, n_steps, log_every)
+        it += n_sub
+    if pos is not None:
+        state.pos = np.asarray(pos)
+        state.vel = np.asarray(vel)
+    state.step += n_steps
+    return state, thermo
+
+
+def _run_nve_host(cfg, beta, beta0, state, n_steps, dt, mass, impl,
+                  rebuild_every, max_nbors, log_every, force_kwargs,
+                  fn_cache=None):
+    cache = fn_cache if fn_cache is not None else {}
+    if 'force' not in cache:
+        cache['force'] = make_force_fn(cfg, beta, beta0, impl,
+                                       **(force_kwargs or {}))
+    force_fn = cache['force']
     thermo = []
     nbr = None
     f = None
+    e = None
     for it in range(n_steps):
         if it % rebuild_every == 0 or nbr is None:
             nbr_idx, mask, disp, _ = brute_neighbors(
                 state.pos, state.box, cfg.rcut, max_nbors)
             nbr = (nbr_idx, mask)
-            e, fj = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
-                             nbr_idx, mask)
-            f = np.asarray(fj)
+            if f is None:   # only step 0 lacks a force; rebuilds keep the
+                # carried force (same positions, refreshed topology)
+                e, fj = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
+                                 nbr_idx, mask)
+                f = np.asarray(fj)
         # velocity verlet
         acc = f / mass * ACC_CONV
         state.vel = state.vel + 0.5 * dt * acc
         state.pos = state.pos + dt * state.vel
         nbr_idx, mask = nbr
-        _, _, disp, _ = _recompute_disp(state.pos, state.box, nbr_idx, mask)
+        disp = _recompute_disp(state.pos, state.box, nbr_idx)
         e, fj = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
                          nbr_idx, mask)
         f = np.asarray(fj)
@@ -104,7 +233,6 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
     return state, thermo
 
 
-def _recompute_disp(pos, box, nbr_idx, mask):
+def _recompute_disp(pos, box, nbr_idx):
     d = pos[nbr_idx] - pos[:, None, :]
-    d = d - box * np.round(d / box)
-    return nbr_idx, mask, d, None
+    return d - box * np.round(d / box)

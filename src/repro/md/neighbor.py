@@ -20,6 +20,23 @@ from __future__ import annotations
 import numpy as np
 
 
+class NeighborOverflowError(RuntimeError):
+    """An atom has more neighbors within rcut than the padded list holds.
+
+    Silent truncation would drop force pairs asymmetrically (violating
+    Newton's third law and energy conservation), so both builders count
+    every in-range candidate and raise instead.
+    """
+
+    def __init__(self, max_count, max_nbors):
+        self.max_count = int(max_count)
+        self.max_nbors = int(max_nbors)
+        super().__init__(
+            f'neighbor list overflow: an atom has {self.max_count} '
+            f'neighbors within rcut but max_nbors={self.max_nbors}; '
+            f'rerun with max_nbors >= {self.max_count}')
+
+
 def _min_image(d, box):
     return d - box * np.round(d / box)
 
@@ -34,13 +51,15 @@ def brute_neighbors(pos, box, rcut, max_nbors=None):
     np.fill_diagonal(r2, np.inf)
     within = r2 < rcut * rcut
     counts = within.sum(1)
+    if max_nbors is not None and counts.max() > max_nbors:
+        raise NeighborOverflowError(counts.max(), max_nbors)
     K = max_nbors or int(counts.max())
     nbr_idx = np.zeros((N, K), np.int32)
     mask = np.zeros((N, K), bool)
     disp = np.zeros((N, K, 3))
     shifts = np.zeros((N, K, 3))
     for i in range(N):
-        js = np.nonzero(within[i])[0][:K]
+        js = np.nonzero(within[i])[0]
         c = len(js)
         nbr_idx[i, :c] = js
         mask[i, :c] = True
@@ -83,10 +102,15 @@ def cell_neighbors(pos, box, rcut, max_nbors=64):
                 d = pos[j] - pos[i]
                 s = -box * np.round(d / box)
                 dd = d + s
-                if dd @ dd < r2cut and c < max_nbors:
-                    nbr_idx[i, c] = j
-                    mask[i, c] = True
-                    disp[i, c] = dd
-                    shifts[i, c] = s
+                if dd @ dd < r2cut:
+                    if c < max_nbors:
+                        nbr_idx[i, c] = j
+                        mask[i, c] = True
+                        disp[i, c] = dd
+                        shifts[i, c] = s
                     c += 1
+        # finish counting before raising so the error reports the atom's
+        # true neighbor count, not the lower bound max_nbors + 1
+        if c > max_nbors:
+            raise NeighborOverflowError(c, max_nbors)
     return nbr_idx, mask, disp, shifts

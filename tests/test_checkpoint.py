@@ -84,8 +84,8 @@ def test_reshard_on_restore(tmp_path):
     tree = _tree()
     d = tmp_path / 'step_00000009'
     ckpt.save(d, tree, step=9)
-    mesh = jax.make_mesh((1,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.compat import make_auto_mesh
+    mesh = make_auto_mesh((1,), ('data',))
     sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), tree)
     out = ckpt.restore(d, tree, sh)
     assert out['params']['w'].sharding.is_fully_replicated

@@ -32,8 +32,8 @@ def test_compressed_psum_accuracy():
     out = run_py('''
         import jax, jax.numpy as jnp, numpy as np
         from repro.optim.compression import make_dp_compressed_grad
-        mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import make_auto_mesh, set_mesh
+        mesh = make_auto_mesh((2, 4), ('pod', 'data'))
 
         def loss_fn(params, batch):
             pred = batch['x'] @ params['w']
@@ -45,7 +45,7 @@ def test_compressed_psum_accuracy():
                  'y': jax.random.normal(k, (32, 4))}
         exact = jax.grad(loss_fn)(params, batch)['w']
         fn = make_dp_compressed_grad(loss_fn, mesh, axis='pod')
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             loss, grads = jax.jit(fn)(params, batch)
         g = np.asarray(grads['w'])
         rel = np.abs(g - np.asarray(exact)).max() / np.abs(exact).max()
@@ -64,8 +64,8 @@ def test_sharded_train_step_runs():
         from repro.launch.steps import make_train_step
         from repro.models.transformer import init_params
         from repro.optim.adamw import adamw_init
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import make_auto_mesh, set_mesh
+        mesh = make_auto_mesh((4, 2), ('data', 'model'))
         cfg = get_config('granite-moe-1b-a400m').reduced(
             d_model=64, vocab=512, n_heads=4, n_kv=2)
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -77,7 +77,7 @@ def test_sharded_train_step_runs():
         batch = {'tokens': tokens, 'labels': tokens}
         bs = batch_shardings(batch, mesh)
         step = make_train_step(cfg)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             params = jax.device_put(params, ps)
             opt = jax.device_put(opt, os_)
             batch = jax.device_put(batch, bs)
@@ -100,14 +100,13 @@ def test_checkpoint_reshard_across_meshes(tmp_path):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.runtime import checkpoint as ckpt
         tree = {{'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-        mesh1 = jax.make_mesh((8,), ('data',),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.compat import make_auto_mesh
+        mesh1 = make_auto_mesh((8,), ('data',))
         sh1 = {{'w': NamedSharding(mesh1, P('data'))}}
         sharded = jax.device_put(tree, sh1)
         ckpt.save(r'{tmp_path}/step_00000001', sharded, 1)
         # restore onto a DIFFERENT mesh/sharding (elastic restart)
-        mesh2 = jax.make_mesh((2, 4), ('data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_auto_mesh((2, 4), ('data', 'model'))
         sh2 = {{'w': NamedSharding(mesh2, P('model', 'data'))}}
         out = ckpt.restore(r'{tmp_path}/step_00000001', tree, sh2)
         np.testing.assert_array_equal(np.asarray(out['w']),

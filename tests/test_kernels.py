@@ -9,9 +9,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.snap import SnapConfig, energy_forces_adjoint
+from repro.core import bispectrum as bs
+from repro.core.snap import (SnapConfig, _pair_geometry,
+                             energy_forces_adjoint, energy_forces_autodiff)
+from repro.core.ulist import compute_ulist, compute_ulisttot
 from repro.kernels.ops import (_kernel_layout, energy_forces_kernel,
-                               snap_dedr_kernel, snap_ui_kernel)
+                               snap_dedr_kernel, snap_force_pipeline,
+                               snap_ui_kernel, snap_yi_kernel)
 from repro.kernels.ref import ref_snap_fused_de, ref_snap_u
 from repro.kernels.snap_fused_de import snap_fused_de_pallas
 from repro.kernels.snap_u import snap_u_pallas
@@ -60,6 +64,70 @@ def test_fused_de_kernel_sweep(twojmax, dtype, natoms, nnbor):
     scale = max(1.0, float(jnp.abs(r).max()))
     np.testing.assert_allclose(np.asarray(k) / scale, np.asarray(r) / scale,
                                **TOL[dtype])
+
+
+def _oracle_ulisttot(cfg, disp, mask):
+    """fp64 Ulisttot [natoms, idxu_max] from the core reference pipeline."""
+    idx = cfg.index
+    dx, dy, dz = (jnp.asarray(disp[..., i]) for i in range(3))
+    geom, _, ok = _pair_geometry(cfg, dx, dy, dz, jnp.asarray(mask),
+                                 grad=False)
+    u = compute_ulist(geom, idx, jnp.complex128)
+    return compute_ulisttot(u, geom.sfac, ok, idx, cfg.wself)
+
+
+@pytest.mark.parametrize('twojmax', [4, 8])
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.float64])
+def test_snap_y_kernel_parity(twojmax, dtype):
+    """Pallas one-hot-matmul Y == bs.compute_ylist on identical Ulisttot.
+
+    Acceptance bar: <= 1e-5 relative (f32) / 1e-10 (f64) at twojmax=8.
+    """
+    cfg = SnapConfig(twojmax=twojmax, rcut=3.0)
+    _, disp, _, mask, _ = make_cluster(natoms=9, nnbor=6, seed=twojmax)
+    ut = _oracle_ulisttot(cfg, disp, mask)
+    rng = np.random.default_rng(twojmax)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff))
+    y_ref = bs.compute_ylist(ut, beta, cfg.index)
+    y_k = snap_yi_kernel(cfg, ut, beta, dtype=dtype, interpret=True)
+    scale = max(1.0, float(jnp.abs(y_ref).max()))
+    tol = 1e-5 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(y_k.real) / scale,
+                               np.asarray(y_ref.real) / scale, atol=tol)
+    np.testing.assert_allclose(np.asarray(y_k.imag) / scale,
+                               np.asarray(y_ref.imag) / scale, atol=tol)
+
+
+def test_snap_y_kernel_tile_sweep():
+    """Tile size must not change the contraction (pad entries are inert)."""
+    cfg = SnapConfig(twojmax=4, rcut=3.0)
+    _, disp, _, mask, _ = make_cluster(natoms=5, nnbor=4, seed=11)
+    ut = _oracle_ulisttot(cfg, disp, mask)
+    rng = np.random.default_rng(11)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff))
+    ys = [np.asarray(snap_yi_kernel(cfg, ut, beta, dtype=jnp.float64,
+                                    interpret=True, y_tile=tile))
+          for tile in (128, 512, 2048)]
+    np.testing.assert_allclose(ys[1], ys[0], rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(ys[2], ys[0], rtol=1e-12, atol=1e-12)
+
+
+def test_kernel_pipeline_matches_autodiff():
+    """End-to-end zero-relayout pipeline vs the reverse-mode AD oracle."""
+    cfg = SnapConfig(twojmax=4, rcut=3.0)
+    pos, disp, nbr_idx, mask, shifts = make_cluster(seed=5)
+    rng = np.random.default_rng(5)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff))
+    e_g, f_g = energy_forces_autodiff(cfg, beta, 0.1, jnp.asarray(pos),
+                                      nbr_idx, shifts, mask)
+    e_k, _, f_k = snap_force_pipeline(cfg, beta, 0.1, disp[..., 0],
+                                      disp[..., 1], disp[..., 2], nbr_idx,
+                                      mask, dtype=jnp.float64,
+                                      interpret=True)
+    np.testing.assert_allclose(float(e_k), float(e_g), rtol=1e-11)
+    scale = float(jnp.abs(f_g).max())
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_g),
+                               atol=1e-10 * scale)
 
 
 @pytest.mark.parametrize('twojmax', [4, 8])

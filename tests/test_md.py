@@ -7,7 +7,8 @@ import pytest
 from repro.core.snap import SnapConfig
 from repro.md.integrate import MDState, init_velocities, run_nve
 from repro.md.lattice import bcc_lattice, paper_box, perturb
-from repro.md.neighbor import brute_neighbors, cell_neighbors
+from repro.md.neighbor import (NeighborOverflowError, brute_neighbors,
+                               cell_neighbors)
 
 CFG = SnapConfig(twojmax=4, rcut=4.7)
 
@@ -37,6 +38,40 @@ def test_neighbor_displacement_consistency():
     nbr, mask, disp, shifts = brute_neighbors(pos, box, 4.7, 40)
     recon = pos[nbr] + shifts - pos[:, None, :]
     np.testing.assert_allclose(recon[mask], disp[mask], atol=1e-12)
+
+
+def test_neighbor_overflow_raises():
+    """Silent truncation past max_nbors (regression): both builders must
+    detect the overflow and raise instead of dropping force pairs."""
+    pos, box = paper_box(natoms=128)
+    # 26 in-range neighbors at rcut=4.7; a 10-slot list must overflow
+    with pytest.raises(NeighborOverflowError, match='overflow'):
+        brute_neighbors(pos, box, 4.7, max_nbors=10)
+    pos250, box250 = paper_box(natoms=250)   # >= 3 bins/dim for cell list
+    with pytest.raises(NeighborOverflowError, match='overflow'):
+        cell_neighbors(pos250, box250, 4.0, max_nbors=10)
+    # exactly-full lists are fine (26 == 26)
+    _, mask, _, _ = brute_neighbors(pos, box, 4.7, max_nbors=26)
+    assert mask.sum(1).max() == 26
+
+
+def test_scan_loop_matches_host_loop():
+    """The on-device lax.scan segment loop reproduces the per-step host
+    driver (same force sequence, same thermo) to fp round-off."""
+    rng = np.random.default_rng(2)
+    beta = jnp.asarray(rng.normal(size=CFG.ncoeff) * 5e-3)
+    pos, box = paper_box(natoms=54)
+    pos = perturb(pos, 0.03, seed=7)
+    outs = {}
+    for loop in ('scan', 'host'):
+        state = MDState(pos=pos.copy(),
+                        vel=init_velocities(len(pos), 200.0, seed=8),
+                        box=box)
+        _, thermo = run_nve(CFG, beta, 0.0, state, n_steps=6, dt=0.0005,
+                            rebuild_every=3, log_every=1, loop=loop)
+        outs[loop] = np.array([[t['T'], t['pe'], t['etot']] for t in thermo])
+    np.testing.assert_allclose(outs['scan'], outs['host'],
+                               rtol=1e-9, atol=1e-9)
 
 
 def test_nve_energy_conservation():

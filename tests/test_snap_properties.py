@@ -6,6 +6,9 @@ forces must be equivariant under rotation.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip('hypothesis')
 from hypothesis import given, settings, strategies as st
 
 from repro.core.snap import (SnapConfig, compute_bispectrum,

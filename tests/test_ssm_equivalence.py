@@ -44,8 +44,10 @@ def test_chunked_matches_sequential(kind, arch, S):
     x = jax.random.normal(jax.random.fold_in(key, 99), (2, S, cfg.d_model))
     y_full, st_full = fwd(x, p, cfg, None, chunk=8)
     y_seq = _sequential(fwd, x, p, cfg)
+    # f32 chunked-vs-sequential reassociation: XLA-version-dependent
+    # summation order leaves a few ~1e-8 absolute stragglers
     np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
-                               rtol=1e-8, atol=1e-8)
+                               rtol=1e-7, atol=5e-8)
     # carried state must let decode continue seamlessly
     x2 = jax.random.normal(jax.random.fold_in(key, 7), (2, 1, cfg.d_model))
     y_a, _ = fwd(x2, p, cfg, st_full)
