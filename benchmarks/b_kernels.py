@@ -66,7 +66,7 @@ def run(quick=True, out_dir=None):
         snap_u=dict(pallas_s=t_uk, jnp_s=t_ur),
         snap_y=dict(pallas_s=t_yk, jnp_s=t_yr),
         fused_de=dict(pallas_s=t_dek),
-    ), out_dir)
+    ), out_dir, interpret=True)
 
     # VMEM working-set accounting (the paper's occupancy argument, Sec VI)
     iu = idx.idxu_max

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,20 +31,25 @@ def _fresh_state(natoms, temp=300.0):
 
 
 def _time_md(cfg, beta, natoms, n_steps, impl, loop, rebuild_every,
-             max_nbors, force_kwargs=None):
-    """Wall-clock a full run_nve pass; warmup run compiles via fn_cache."""
+             max_nbors, force_kwargs=None, **md_kw):
+    """Wall-clock a full run_nve pass; warmup run compiles via fn_cache.
+
+    Returns (seconds, fn_cache) — the cache carries device-loop
+    diagnostics (rebuild counts, trace counts) for the JSON rows.
+    """
     from repro.md.integrate import run_nve
     cache = {}
     kw = dict(impl=impl, loop=loop, rebuild_every=rebuild_every,
               max_nbors=max_nbors, log_every=max(1, n_steps // 2),
-              dt=0.0005, fn_cache=cache, force_kwargs=force_kwargs or {})
+              dt=0.0005, fn_cache=cache, force_kwargs=force_kwargs or {},
+              **md_kw)
     run_nve(cfg, beta, 0.0, _fresh_state(natoms), n_steps, **kw)  # warmup
     ts = []
     for _ in range(3):
         t0 = time.perf_counter()
         run_nve(cfg, beta, 0.0, _fresh_state(natoms), n_steps, **kw)
         ts.append(time.perf_counter() - t0)
-    return min(ts)
+    return min(ts), cache
 
 
 def run(quick=True, out_dir=None):
@@ -59,34 +65,69 @@ def run(quick=True, out_dir=None):
     cfg = SnapConfig(twojmax=twojmax, rcut=rcut)
     rng = np.random.default_rng(1)
     beta = jnp.asarray(rng.normal(size=cfg.ncoeff) * 5e-3)
+    skin = 0.4 * rcut / 4.7          # Verlet skin for the device engine
 
     results = dict(natoms=natoms, twojmax=twojmax, n_steps=n_steps,
-                   rebuild_every=rebuild_every, impls={}, loops={})
+                   rebuild_every=rebuild_every, skin=skin, impls={},
+                   loops={})
 
     force_kw = {'kernel': dict(interpret=True)}
     for impl in ('baseline', 'adjoint', 'kernel'):
-        t = _time_md(cfg, beta, natoms, n_steps, impl, 'scan',
-                     rebuild_every, max_nbors, force_kw.get(impl))
+        t, _ = _time_md(cfg, beta, natoms, n_steps, impl, 'scan',
+                        rebuild_every, max_nbors, force_kw.get(impl))
         ka = natoms * n_steps / t / 1e3
         results['impls'][impl] = dict(seconds=t, katom_steps_per_s=ka)
         emit(f'md_grind_{impl}_scan_2J{twojmax}_N{natoms}', t / n_steps,
              f'{ka:.2f}katom-steps/s')
 
-    # scan-vs-host A/B on the adjoint impl: same force pipeline, the only
-    # delta is whether the inner loop round-trips through host numpy
-    for loop in ('scan', 'host'):
-        t = _time_md(cfg, beta, natoms, n_steps, 'adjoint', loop,
-                     rebuild_every, max_nbors)
+    # loop A/B on the adjoint impl: same force pipeline, the only deltas
+    # are whether the inner loop round-trips through host numpy ('host' vs
+    # 'scan') and where neighbor rebuilds run.  'scan'/'host' rebuild on
+    # the host every rebuild_every steps (stale topology in between);
+    # 'scan_exact' rebuilds on the host every step — the equal-accuracy
+    # reference for 'device', whose half-skin trigger + per-step rcut cut
+    # give exact-rcut forces at every step by construction.
+    loop_rows = (('scan', 'scan', rebuild_every, {}),
+                 ('host', 'host', rebuild_every, {}),
+                 ('scan_exact', 'scan', 1, {}),
+                 ('device', 'device', rebuild_every, dict(skin=skin)))
+    for name, loop, rb, md_kw in loop_rows:
+        t, cache = _time_md(cfg, beta, natoms, n_steps, 'adjoint', loop,
+                            rb, max_nbors, **md_kw)
         ka = natoms * n_steps / t / 1e3
-        results['loops'][loop] = dict(seconds=t, katom_steps_per_s=ka)
-        emit(f'md_grind_adjoint_{loop}loop_2J{twojmax}_N{natoms}',
+        row = dict(seconds=t, katom_steps_per_s=ka)
+        if loop == 'device':
+            row['rebuilds'] = cache.get('device_rebuilds', 0)
+            row['jit_traces'] = cache.get('device_trace_count',
+                                          {}).get('traces')
+        results['loops'][name] = row
+        emit(f'md_grind_adjoint_{name}loop_2J{twojmax}_N{natoms}',
              t / n_steps, f'{ka:.2f}katom-steps/s')
     speedup = (results['loops']['host']['seconds']
                / results['loops']['scan']['seconds'])
     results['scan_speedup_over_host'] = speedup
     emit('md_grind_scan_speedup_over_host', 0.0, f'{speedup:.2f}x')
+    dev_speedup = (results['loops']['scan_exact']['seconds']
+                   / results['loops']['device']['seconds'])
+    results['device_speedup_over_exact_rebuild'] = dev_speedup
+    emit('md_grind_device_speedup_over_exact_rebuild', 0.0,
+         f'{dev_speedup:.2f}x')
 
-    write_bench_json('md_grind', results, out_dir)
+    # atom-shard scaling on the device loop (>= 2 shards when the runtime
+    # exposes >= 2 devices; CI forces 2 host devices via XLA_FLAGS)
+    n_dev = len(jax.devices())
+    shards = 2 if (n_dev >= 2 and natoms % 2 == 0) else 1
+    t_sh, _ = _time_md(cfg, beta, natoms, n_steps, 'adjoint', 'device',
+                       rebuild_every, max_nbors, skin=skin, shards=shards)
+    ka_sh = natoms * n_steps / t_sh / 1e3
+    results['atom_shard'] = dict(
+        shards=shards, n_devices=n_dev, seconds=t_sh,
+        katom_steps_per_s=ka_sh,
+        one_shard_seconds=results['loops']['device']['seconds'])
+    emit(f'md_grind_adjoint_device_shards{shards}_2J{twojmax}_N{natoms}',
+         t_sh / n_steps, f'{ka_sh:.2f}katom-steps/s')
+
+    write_bench_json('md_grind', results, out_dir, interpret=True)
     return results
 
 

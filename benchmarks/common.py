@@ -43,20 +43,31 @@ def emit(name, seconds, derived=''):
     print(f'{name},{us:.1f},{derived}')
 
 
-def write_bench_json(name, payload, out_dir=None):
+def write_bench_json(name, payload, out_dir=None, interpret=None):
     """Persist one benchmark section as ``BENCH_<name>.json``.
 
     The JSON artifacts are the machine-readable perf trajectory tracked
     PR-over-PR (CI smoke-validates their presence); CSV stdout stays the
     human-readable view.  Returns the written path.
+
+    interpret: whether Pallas kernels in this run executed in interpret
+    mode — recorded so interpret-mode numbers (kernel bodies run as traced
+    jnp per grid step) are never mistaken for real kernel losses when
+    comparing artifacts across machines.  Together with device_kind /
+    jax_version this makes every artifact self-describing.
     """
     out_dir = out_dir or os.environ.get('BENCH_OUT_DIR', '.')
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f'BENCH_{name}.json')
+    dev = jax.devices()[0]
     doc = dict(
         name=name,
         unix_time=time.time(),
-        platform=jax.devices()[0].platform,
+        platform=dev.platform,
+        device_kind=getattr(dev, 'device_kind', dev.platform),
+        n_devices=len(jax.devices()),
+        jax_version=jax.__version__,
+        interpret=interpret,
         machine=platform.machine(),
         results=payload,
     )

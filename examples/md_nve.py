@@ -25,6 +25,12 @@ def main():
     ap.add_argument('--impl', default='adjoint',
                     choices=['baseline', 'adjoint', 'kernel'])
     ap.add_argument('--twojmax', type=int, default=8)
+    ap.add_argument('--loop', default='scan',
+                    choices=['device', 'scan', 'host'],
+                    help="'device' folds neighbor rebuilds into the jitted "
+                         'loop (on-device cell list + half-skin trigger)')
+    ap.add_argument('--skin', type=float, default=1.0,
+                    help='Verlet skin radius for --loop device')
     args = ap.parse_args()
 
     cfg = SnapConfig(twojmax=args.twojmax, rcut=4.7)
@@ -38,7 +44,8 @@ def main():
     state = MDState(pos=pos, vel=init_velocities(len(pos), temp=300.0),
                     box=box)
     state, thermo = run_nve(cfg, beta, 0.0, state, args.steps,
-                            impl=args.impl, log_every=5)
+                            impl=args.impl, log_every=5, loop=args.loop,
+                            skin=args.skin)
     print(f'{"step":>6} {"T[K]":>10} {"PE[eV]":>14} {"Etot[eV]":>14}')
     for t in thermo:
         print(f'{t["step"]:>6} {t["T"]:>10.2f} {t["pe"]:>14.6f} '

@@ -92,13 +92,33 @@ def snap_energy(cfg: SnapConfig, beta, beta0, dx, dy, dz, mask):
     return jnp.sum(e_atom), e_atom
 
 
-def assemble_forces(dedr, nbr_idx, mask, natoms):
-    """F_i += sum_k dE_i/dr_k ; F_k -= dE_i/dr_k (Newton's third law)."""
+def assemble_forces(dedr, nbr_idx, mask, natoms, axis_name=None):
+    """F_i += sum_k dE_i/dr_k ; F_k -= dE_i/dr_k (Newton's third law).
+
+    axis_name=None: single-shard assembly — ``dedr`` rows span all
+    ``natoms`` atoms and ``natoms == dedr.shape[0]``.
+
+    axis_name='...': atom-sharded assembly inside ``shard_map`` — ``dedr``
+    holds this shard's *local* atom rows, ``nbr_idx`` holds **global**
+    indices, and ``natoms`` is the global count.  Each shard accumulates a
+    full-length partial force array (its center-atom rows at the shard
+    offset, its Newton reaction scatters wherever the neighbor lives), and
+    a ``psum_scatter`` reduce-scatter sums the cross-shard (halo)
+    contributions while returning only the local rows — the segment-sum
+    analogue of a halo exchange.
+    """
     d = dedr * mask[..., None]
     f = jnp.zeros((natoms, 3), dtype=dedr.dtype)
-    f = f + d.sum(axis=1)                       # center rows are 0..natoms-1
+    if axis_name is None:
+        f = f + d.sum(axis=1)                   # center rows are 0..natoms-1
+        f = f.at[nbr_idx.reshape(-1)].add(-d.reshape(-1, 3))
+        return f
+    n_local = dedr.shape[0]
+    off = jax.lax.axis_index(axis_name) * n_local
+    f = f.at[off + jnp.arange(n_local)].add(d.sum(axis=1))
     f = f.at[nbr_idx.reshape(-1)].add(-d.reshape(-1, 3))
-    return f
+    return jax.lax.psum_scatter(f, axis_name, scatter_dimension=0,
+                                tiled=True)
 
 
 # ---------------------------------------------------------------------------
@@ -138,10 +158,17 @@ def energy_from_ylist(cfg: SnapConfig, ulisttot, ylist, beta, beta0):
 
 def energy_forces_adjoint(cfg: SnapConfig, beta, beta0, dx, dy, dz,
                           nbr_idx, mask, with_energy: bool = True,
-                          energy_via_z: bool = False):
-    """The paper's refactored pipeline: U -> Y -> fused dE -> forces."""
+                          energy_via_z: bool = False, shard=None):
+    """The paper's refactored pipeline: U -> Y -> fused dE -> forces.
+
+    shard: optional ``(axis_name, n_shards)`` when running as the per-shard
+    body of an atom-sharded ``shard_map`` — rows are local atoms, nbr_idx is
+    global, and force assembly reduce-scatters across shards.  The returned
+    energy is then this shard's partial sum (the wrapper psums it).
+    """
     idx = cfg.index
     natoms = dx.shape[0]
+    axis_name, n_shards = shard if shard is not None else (None, 1)
     geom, dgeom, ok = _pair_geometry(cfg, dx, dy, dz, mask, grad=True)
     u, du = compute_dulist(geom, dgeom, idx, cfg.dtype)
     ut = compute_ulisttot(u, geom.sfac, ok, idx, cfg.wself)
@@ -150,7 +177,8 @@ def energy_forces_adjoint(cfg: SnapConfig, beta, beta0, dx, dy, dz,
     dedr = bs.compute_dedr(
         du.reshape(-1, 3, idx.idxu_max), y, atom_of_pair, idx)
     forces = assemble_forces(
-        dedr.reshape(natoms, -1, 3), nbr_idx, ok, natoms)
+        dedr.reshape(natoms, -1, 3), nbr_idx, ok, natoms * n_shards,
+        axis_name=axis_name)
     if not with_energy:
         return None, None, forces
     if energy_via_z:
@@ -167,10 +195,11 @@ def energy_forces_adjoint(cfg: SnapConfig, beta, beta0, dx, dy, dz,
 # ---------------------------------------------------------------------------
 
 def energy_forces_baseline(cfg: SnapConfig, beta, beta0, dx, dy, dz,
-                           nbr_idx, mask, db_chunks: int = 8):
+                           nbr_idx, mask, db_chunks: int = 8, shard=None):
     """Pre-refactorization formulation: materializes Zlist and dBlist."""
     idx = cfg.index
     natoms, nnbor = dx.shape
+    axis_name, n_shards = shard if shard is not None else (None, 1)
     geom, dgeom, ok = _pair_geometry(cfg, dx, dy, dz, mask, grad=True)
     u, du = compute_dulist(geom, dgeom, idx, cfg.dtype)
     ut = compute_ulisttot(u, geom.sfac, ok, idx, cfg.wself)
@@ -182,7 +211,7 @@ def energy_forces_baseline(cfg: SnapConfig, beta, beta0, dx, dy, dz,
                                  db_chunks)
     dedr = jnp.einsum('pkl,l->pk', db, beta.astype(db.dtype))
     forces = assemble_forces(dedr.reshape(natoms, nnbor, 3), nbr_idx, ok,
-                             natoms)
+                             natoms * n_shards, axis_name=axis_name)
     b = bs.compute_blist(ut, zlist, idx, cfg.bzero_flag)
     e_atom = beta0 + b @ beta.astype(b.dtype)
     return jnp.sum(e_atom), e_atom, forces

@@ -75,12 +75,16 @@ def energy_from_ylist_lanes(cfg: SnapConfig, ut_r, ut_i, y_r, y_i,
 def snap_force_pipeline(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
                         mask, dtype=jnp.float32, interpret=None,
                         with_energy=True, variant: str = 'half',
-                        y_tile: int = Y_TILE):
+                        y_tile: int = Y_TILE, shard=None):
     """Zero-relayout kernel pipeline: Pallas U -> Pallas Y -> Pallas fused dE.
 
     Every inter-stage tensor stays in the canonical [*, natoms_pad] device
     layout; the per-entry Y coefficient (cg * y_fac * beta gather, no atom
     axis) is the only stage input computed at the JAX level.
+
+    shard: optional ``(axis_name, n_shards)`` for the atom-sharded path —
+    the Pallas stages are untouched (atoms already live on the lane axis,
+    per shard), only the exit force assembly reduce-scatters.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -101,8 +105,10 @@ def snap_force_pipeline(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
         rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
 
     # pipeline exit: per-pair dE back to [natoms, nnbor, 3] force assembly
+    axis_name, n_shards = shard if shard is not None else (None, 1)
     dedr_pairs = dedr[:, :3, :natoms].transpose(2, 0, 1)
-    forces = assemble_forces(dedr_pairs, nbr_idx, ok, natoms)
+    forces = assemble_forces(dedr_pairs, nbr_idx, ok, natoms * n_shards,
+                             axis_name=axis_name)
     if not with_energy:
         return None, None, forces
     e_atom = energy_from_ylist_lanes(cfg, ut_r, ut_i, y_r, y_i,
@@ -112,6 +118,40 @@ def snap_force_pipeline(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
 
 # the dispatcher-facing name; kept as an alias for existing callers/tests
 energy_forces_kernel = snap_force_pipeline
+
+
+def make_sharded_force_fn(cfg: SnapConfig, beta, beta0, mesh, axis='data',
+                          impl='adjoint', **kw):
+    """Atom-sharded force pipeline: ``shard_map`` over ``mesh[axis]``.
+
+    Returns a jitted ``fn(dx, dy, dz, nbr_idx, mask) -> (e, e_atom, f)``
+    whose inputs/outputs have *global* atom leading dims (divisible by the
+    axis size).  Each shard runs the chosen pipeline on its local atom rows
+    — the Pallas kernels need no layout change because atoms already live
+    on the lane axis per shard — and the cross-shard force pairs are summed
+    by the reduce-scatter inside :func:`repro.core.snap.assemble_forces`.
+    The total energy is psum-reduced and replicated.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.snap import energy_forces
+
+    n_shards = int(mesh.shape[axis])
+
+    def body(dx, dy, dz, nbr_idx, mask):
+        e, e_atom, f = energy_forces(cfg, beta, beta0, dx, dy, dz, nbr_idx,
+                                     mask, impl=impl,
+                                     shard=(axis, n_shards), **kw)
+        return jax.lax.psum(e, axis), e_atom, f
+
+    # check_rep=False: pallas_call has no replication rule (jax#21577-style
+    # workaround); correctness is covered by the sharded-parity tests
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+                   out_specs=(P(), P(axis), P(axis)), check_rep=False)
+    return jax.jit(sm)
 
 
 # ---------------------------------------------------------------------------

@@ -161,3 +161,20 @@ def cache_shardings(cache, mesh):
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+def make_atom_mesh(n_shards=None):
+    """1-D mesh over the 'data' axis for atom-sharded SNAP force pipelines.
+
+    Atom sharding reuses the FSDP/data axis name so the same specs compose
+    with the production meshes in :mod:`repro.launch.mesh`; a dedicated 1-D
+    mesh is the common case for MD (no model-parallel dimension).
+    """
+    from .compat import make_auto_mesh
+    n = int(n_shards) if n_shards else len(jax.devices())
+    return make_auto_mesh((n,), ('data',))
+
+
+def atom_shardings(mesh, axis='data'):
+    """NamedShardings for atom-leading MD arrays: (sharded, replicated)."""
+    return NamedSharding(mesh, P(axis)), NamedSharding(mesh, P())

@@ -1,14 +1,21 @@
 """Velocity-Verlet NVE integration driving the SNAP force pipelines.
 
-The MD loop is the LAMMPS-shaped outer driver: neighbor lists rebuild on
-the host every ``rebuild_every`` steps (fixed-shape padded lists), while the
-inner velocity-Verlet loop between rebuilds runs as ONE jitted
-``jax.lax.scan`` segment — positions, velocities, and forces stay on device,
-with per-step displacement recomputation (``pos[nbr] + shift - pos``) inside
-the scan.  The host only touches data at rebuild boundaries (pull positions,
-rebuild topology) and reads per-step energies back for logging from the
-scan's stacked outputs.  ``loop='host'`` keeps the legacy per-step driver
-for A/B benchmarking (see benchmarks/b_md_grind.py).
+Three loop drivers, fastest first:
+
+- ``loop='device'``: the fully on-device engine — neighbor rebuilds run as
+  traced JAX ops (:mod:`repro.md.cell_list`) *inside* the jitted step scan,
+  triggered by a half-skin displacement check (``lax.cond``), so there is no
+  host control plane at all: the host only reads back stacked (PE, KE) rows
+  and overflow flags at logging boundaries.  Lists are built at
+  ``rcut + skin`` and hard-cut at ``rcut`` per step, which (a) makes forces
+  exact regardless of when the last rebuild happened and (b) keeps the
+  Cayley-Klein ``theta0 = pi`` singularity just beyond rcut out of the
+  kernels.
+- ``loop='scan'``: the LAMMPS-shaped A/B driver — neighbor lists rebuild on
+  the host every ``rebuild_every`` steps (fixed-shape padded lists), the
+  inner velocity-Verlet segment runs as ONE jitted ``jax.lax.scan``.
+- ``loop='host'``: the legacy per-step driver (one jitted force call per
+  step) for A/B benchmarking (see benchmarks/b_md_grind.py).
 
 Thermodynamic output (temperature, PE, virial pressure) reproduces the
 verification methodology of the paper's Sec. VI ("comparing the
@@ -26,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.snap import SnapConfig, energy_forces
+from .cell_list import (auto_cell_cap, check_flags, device_neighbors,
+                        jitted_build, make_grid)
 from .neighbor import brute_neighbors
 
 KB = 8.617333262e-5      # eV/K
@@ -95,6 +104,81 @@ def make_segment_fn(cfg: SnapConfig, beta, beta0, dt, mass,
     return segment
 
 
+def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
+                         impl='adjoint', n_sub: int = 10, force_fn=None,
+                         trace_counter=None, **kw):
+    """One jitted scan over ``n_sub`` steps with the rebuild folded in.
+
+    Carry = (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags), all on
+    device.  Each step: half-kick, drift, then a ``lax.cond`` that rebuilds
+    the cell list at the *current* positions when any atom has moved more
+    than skin/2 since ``pos_ref`` (the positions of the last build) —
+    otherwise the carried topology is provably still a superset of the
+    exact rcut pair set.  The force pipeline then sees a per-step hard cut
+    ``mask & (r^2 < rcut^2)``, so forces are identical to a
+    rebuild-every-step reference.  ``flags`` accumulates the running maxima
+    of neighbor/cell occupancy for the host-boundary overflow check.
+
+    force_fn: optional override for the force evaluation, e.g. an
+    atom-sharded ``shard_map`` pipeline from
+    :func:`repro.kernels.ops.make_sharded_force_fn`; signature
+    ``(dx, dy, dz, nbr_idx, mask) -> (e, e_atom, f)``.
+    """
+    acc_scale = ACC_CONV / mass
+    half_skin2 = (0.5 * grid.skin) ** 2
+    rc2 = cfg.rcut * cfg.rcut
+    counter = trace_counter if trace_counter is not None else {}
+
+    def eval_force(disp, nbr_idx, mask_t):
+        if force_fn is not None:
+            e, _, f = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
+                               nbr_idx, mask_t)
+        else:
+            e, _, f = energy_forces(cfg, beta, beta0, disp[..., 0],
+                                    disp[..., 1], disp[..., 2], nbr_idx,
+                                    mask_t, impl=impl, **kw)
+        return e, f
+
+    @jax.jit
+    def chunk(pos, vel, f, box, nbr_idx, shifts, mask, pos_ref, flags):
+        counter['traces'] = counter.get('traces', 0) + 1
+
+        def step(carry, _):
+            pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags = carry
+            vel = vel + (0.5 * dt * acc_scale) * f
+            pos = pos + dt * vel
+            moved2 = jnp.max(jnp.sum((pos - pos_ref) ** 2, axis=-1))
+            # skin=0 degenerates to rebuild-every-step (moved2 >= 0 always)
+            trigger = (moved2 > half_skin2) if grid.skin > 0 else (
+                moved2 >= 0.0)
+
+            def rebuild(_):
+                ni, ms, sh, fl = device_neighbors(pos, box, grid)
+                return ni, sh, ms, pos, jnp.maximum(flags, fl), jnp.int32(1)
+
+            def keep(_):
+                return nbr_idx, shifts, mask, pos_ref, flags, jnp.int32(0)
+
+            nbr_idx, shifts, mask, pos_ref, flags, rebuilt = jax.lax.cond(
+                trigger, rebuild, keep, None)
+            disp = pos[nbr_idx] + shifts - pos[:, None, :]
+            r2 = jnp.sum(disp * disp, axis=-1)
+            mask_t = mask & (r2 < rc2)              # exact per-step cutoff
+            e, f_new = eval_force(disp, nbr_idx, mask_t)
+            vel = vel + (0.5 * dt * acc_scale) * f_new
+            ke = (0.5 * mass / ACC_CONV) * jnp.sum(vel * vel)
+            carry = (pos, vel, f_new, nbr_idx, shifts, mask, pos_ref, flags)
+            return carry, (e, ke, rebuilt)
+
+        carry = (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags)
+        carry, (pe, ke, rebuilt) = jax.lax.scan(step, carry, None,
+                                                length=n_sub)
+        (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags) = carry
+        return (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags,
+                pe, ke, rebuilt.sum())
+    return chunk
+
+
 def virial_pressure(dedr_like_forces, pos, box):
     """Rough isotropic virial from forces (diagnostic only)."""
     vol = float(np.prod(box))
@@ -107,28 +191,47 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
             impl: str = 'adjoint', rebuild_every: int = 10,
             max_nbors: int = 40, log_every: int = 10,
             loop: str = 'scan', force_kwargs: Dict | None = None,
-            fn_cache: Dict | None = None):
+            fn_cache: Dict | None = None, skin: float = 1.0,
+            cell_cap: int | None = None, shards: int = 1):
     """NVE loop; returns (state, list of thermo dicts).
 
+    loop='device' folds the neighbor rebuild into the jitted step scan (a
+    half-skin displacement trigger decides rebuilds on device); the host
+    only reads logging rows and overflow flags at chunk boundaries.
     loop='scan' (default) runs each inter-rebuild segment as one on-device
-    ``lax.scan``; loop='host' steps on the host (one jitted force call per
-    step).  Both evaluate the force exactly once per step (plus once at
-    step 0) — identical trajectories up to image-convention round-off.
+    ``lax.scan`` with host rebuilds; loop='host' steps on the host (one
+    jitted force call per step).  All evaluate the force exactly once per
+    step (plus once at step 0) — identical trajectories up to
+    image-convention round-off (the device path is additionally exact at
+    rcut per step thanks to its hard cut on the skin-padded lists).
+
+    skin / cell_cap / shards apply to loop='device' only: Verlet skin
+    radius (Å), static cell capacity (auto-sized from the initial
+    configuration when None), and atom shards for the force pipeline (>1
+    wraps the force evaluation in shard_map over `len(jax.devices())`-bound
+    atom shards; natoms must divide by shards).  max_nbors keeps its
+    host-path meaning (capacity of the rcut sphere); the device build
+    auto-scales it to the rcut+skin shell.
 
     fn_cache: optional dict reused across calls to keep the jitted force /
     segment functions (and their compilations) alive — benchmarks pass the
     same dict to warmup and timed runs.  The cached closures bake in the
     physics parameters, so reuse is only valid for identical (cfg, beta,
-    beta0, dt, mass, impl, force_kwargs) — enforced via a fingerprint.
+    beta0, dt, mass, impl, skin, shards, force_kwargs) — enforced via a
+    fingerprint.
     """
     if fn_cache is not None:
         fp = (cfg, np.asarray(beta).tobytes(), float(beta0), float(dt),
-              float(mass), impl,
+              float(mass), impl, float(skin), int(shards),
               tuple(sorted((force_kwargs or {}).items())))
         if fn_cache.setdefault('fingerprint', fp) != fp:
             raise ValueError(
                 'fn_cache was built for different physics parameters '
                 '(cfg/beta/dt/mass/impl/...); pass a fresh dict')
+    if loop == 'device':
+        return _run_nve_device(cfg, beta, beta0, state, n_steps, dt, mass,
+                               impl, max_nbors, log_every, force_kwargs,
+                               fn_cache, skin, cell_cap, shards)
     if loop == 'scan':
         return _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass,
                              impl, rebuild_every, max_nbors, log_every,
@@ -137,7 +240,8 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
         return _run_nve_host(cfg, beta, beta0, state, n_steps, dt, mass,
                              impl, rebuild_every, max_nbors, log_every,
                              force_kwargs, fn_cache)
-    raise ValueError(f"unknown loop {loop!r}; choose 'scan' or 'host'")
+    raise ValueError(
+        f"unknown loop {loop!r}; choose 'device', 'scan' or 'host'")
 
 
 def _log_rows(thermo, seg_pe, seg_ke, first_step, base_step, n_atoms,
@@ -188,6 +292,100 @@ def _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass, impl,
     if pos is not None:
         state.pos = np.asarray(pos)
         state.vel = np.asarray(vel)
+    state.step += n_steps
+    return state, thermo
+
+
+def _run_nve_device(cfg, beta, beta0, state, n_steps, dt, mass, impl,
+                    max_nbors, log_every, force_kwargs, fn_cache, skin,
+                    cell_cap, shards):
+    """Fully on-device driver: rebuilds inside the jitted chunk scan.
+
+    The host's role shrinks to (a) pulling stacked (PE, KE) logging rows
+    and (b) checking the overflow flags — both once per chunk (= logging
+    boundary).  Positions, velocities, forces, topology, and the rebuild
+    decision never leave the device.
+    """
+    kw = force_kwargs or {}
+    cache = fn_cache if fn_cache is not None else {}
+    n_atoms = len(state.pos)
+    box = np.asarray(state.box, np.float64)
+    rb = cfg.rcut + skin
+    # max_nbors sizes the rcut sphere (host-path contract); scale the
+    # padded width to the rcut+skin shell by the volume ratio
+    k_build = int(np.ceil(max_nbors * (rb / cfg.rcut) ** 3 / 4.0)) * 4
+    nbins = tuple(int(max(1, np.floor(b / rb))) for b in box)
+    grid = cache.get('device_grid')
+    if grid is None:
+        cap = cell_cap or auto_cell_cap(state.pos, box, rb)
+        grid = cache['device_grid'] = make_grid(box, cfg.rcut, skin, cap,
+                                                k_build)
+    elif (grid.nbins != nbins or grid.max_nbors != k_build
+          or grid.rcut != cfg.rcut or grid.skin != skin
+          or (cell_cap is not None and grid.cell_cap != cell_cap)):
+        # the grid fingerprint covers what the run_nve fingerprint cannot:
+        # box geometry and list capacities (an auto-sized cell_cap may vary
+        # with positions; capacity violations are still caught by flags)
+        raise ValueError(
+            'fn_cache device grid was built for a different '
+            'box/max_nbors/cell_cap; pass a fresh dict')
+    build = jitted_build(grid)
+
+    force_fn = None
+    if shards > 1:
+        if n_atoms % shards:
+            raise ValueError(
+                f'natoms={n_atoms} must divide by shards={shards}')
+        force_fn = cache.get('device_sharded_force')
+        if force_fn is None:
+            from repro.kernels.ops import make_sharded_force_fn
+            from repro.launch.sharding import make_atom_mesh
+            force_fn = make_sharded_force_fn(
+                cfg, beta, beta0, make_atom_mesh(shards), impl=impl, **kw)
+            cache['device_sharded_force'] = force_fn
+
+    pos = jnp.asarray(state.pos)
+    vel = jnp.asarray(state.vel)
+    boxj = jnp.asarray(box)
+    nbr_idx, mask, shifts, flags = build(pos, boxj)
+    check_flags(flags, grid)
+    # seed the force carry once at step 0 (exact rcut cut, like every step);
+    # jitted — an eager adjoint pipeline here would dominate short runs
+    disp = pos[nbr_idx] + shifts - pos[:, None, :]
+    mask0 = mask & (jnp.sum(disp * disp, -1) < cfg.rcut * cfg.rcut)
+    if force_fn is not None:
+        _, _, f = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
+                           nbr_idx, mask0)
+    else:
+        if 'force' not in cache:
+            cache['force'] = make_force_fn(cfg, beta, beta0, impl, **kw)
+        _, f = cache['force'](disp[..., 0], disp[..., 1], disp[..., 2],
+                              nbr_idx, mask0)
+    pos_ref = pos
+    chunks = cache.setdefault('device_chunks', {})   # n_sub -> jitted chunk
+    counter = cache.setdefault('device_trace_count', {})
+    thermo = []
+    rebuilds = 0
+    it = 0
+    chunk_len = max(1, min(log_every, n_steps))
+    while it < n_steps:
+        n_sub = min(chunk_len, n_steps - it)
+        if n_sub not in chunks:
+            chunks[n_sub] = make_device_chunk_fn(
+                cfg, beta, beta0, dt, mass, grid, impl, n_sub,
+                force_fn=force_fn, trace_counter=counter, **kw)
+        (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags, pe, ke,
+         nreb) = chunks[n_sub](pos, vel, f, boxj, nbr_idx, shifts, mask,
+                               pos_ref, flags)
+        # host boundary: overflow flags + logging rows, nothing else
+        check_flags(flags, grid)
+        rebuilds += int(nreb)
+        _log_rows(thermo, np.asarray(pe), np.asarray(ke), it, state.step,
+                  n_atoms, n_steps, log_every)
+        it += n_sub
+    cache['device_rebuilds'] = rebuilds
+    state.pos = np.asarray(pos)
+    state.vel = np.asarray(vel)
     state.step += n_steps
     return state, thermo
 

@@ -31,6 +31,20 @@ def test_cell_list_matches_brute():
         assert set(bi[i, bm[i]]) == set(ci[i, cm[i]])
 
 
+def test_cell_list_small_box_no_duplicate_pairs():
+    """Regression: with < 3 bins along an axis the 27-stencil offsets alias
+    mod nbins (-1 == +1 mod 2), and the un-deduplicated stencil visited the
+    same cell twice — double-counting every neighbor in it."""
+    for dims, rcut in (((2, 2, 2), 3.0), ((1, 2, 4), 3.0), ((2, 3, 3), 3.0)):
+        pos, box = bcc_lattice(*dims, a=3.1652)
+        pos = perturb(pos, 0.05, seed=sum(dims))
+        bi, bm, _, _ = brute_neighbors(pos, box, rcut, max_nbors=60)
+        ci, cm, _, _ = cell_neighbors(pos, box, rcut, max_nbors=60)
+        assert (bm.sum(1) == cm.sum(1)).all(), dims
+        for i in range(len(pos)):
+            assert set(bi[i, bm[i]]) == set(ci[i, cm[i]]), (dims, i)
+
+
 def test_neighbor_displacement_consistency():
     """disp must equal pos[nbr] + shift - pos[i] exactly."""
     pos, box = paper_box(natoms=54)
