@@ -5,10 +5,24 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
 import time
 
 import jax
 import numpy as np
+
+
+def git_sha() -> str:
+    """Short git SHA of the repo this benchmark ran from ('unknown' when
+    git or the repo is unavailable — artifacts must still be writable)."""
+    try:
+        return subprocess.run(
+            ['git', 'rev-parse', '--short', 'HEAD'],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or 'unknown'
+    except Exception:
+        return 'unknown'
 
 
 def time_fn(fn, *args, warmup=1, iters=3):
@@ -38,6 +52,17 @@ def snap_problem(natoms, twojmax, rcut=4.7, nnbor=26):
     return cfg, beta, disp, nbr_idx, mask
 
 
+def snap_ulisttot(cfg, dx, dy, dz, mask, dtype=None):
+    """Reference Ulisttot [natoms, idxu_max] from the core jnp pipeline —
+    the shared stage-benchmark input (one recipe, not N copies)."""
+    import jax.numpy as jnp
+    from repro.core.snap import _pair_geometry
+    from repro.core.ulist import compute_ulist, compute_ulisttot
+    geom, _, ok = _pair_geometry(cfg, dx, dy, dz, mask, grad=False)
+    u = compute_ulist(geom, cfg.index, dtype or jnp.float32)
+    return compute_ulisttot(u, geom.sfac, ok, cfg.index, cfg.wself)
+
+
 def emit(name, seconds, derived=''):
     us = seconds * 1e6
     print(f'{name},{us:.1f},{derived}')
@@ -63,6 +88,7 @@ def write_bench_json(name, payload, out_dir=None, interpret=None):
     doc = dict(
         name=name,
         unix_time=time.time(),
+        git_sha=git_sha(),
         platform=dev.platform,
         device_kind=getattr(dev, 'device_kind', dev.platform),
         n_devices=len(jax.devices()),

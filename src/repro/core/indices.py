@@ -178,6 +178,20 @@ class SnapIndex:
     idxu_ma: np.ndarray           # [idxu_max]
     self_diag: np.ndarray         # flat indices of (ma == mb) diagonal elems
     dedr_weight: np.ndarray       # [idxu_max] half-plane contraction weights
+    # --- idxu_half: compacted storage of the symmetric left rows 2mb <= j ---
+    # Every full element is recoverable through the j-mirror
+    #     u(j, mb, ma) = (-1)^(mb+ma) conj(u(j, j-mb, j-ma))      (2mb > j)
+    # so the pipeline stores only rows mb <= j/2 of each layer, contiguous
+    # per layer at ``idxu_half_block[j]`` in the same row-major (mb, ma)
+    # order (it is the flattened left storage of the recursion).
+    idxu_half_block: np.ndarray   # [twojmax+1] start offset of half layer j
+    idxu_half_max: int
+    half_to_full: np.ndarray      # [idxu_half_max] flat full-space index
+    full_to_half: np.ndarray      # [idxu_max] half-space source of each elem
+    full_to_half_conj: np.ndarray  # [idxu_max] bool: mirror applies conj
+    full_to_half_sign: np.ndarray  # [idxu_max] (-1)^(mb+ma) on mirrored rows
+    self_diag_half: np.ndarray    # half-space indices of (ma == mb, 2mb<=j)
+    dedr_weight_half: np.ndarray  # [idxu_half_max] contraction weights
     # --- u recursion levels ---
     ulevels: tuple
     # --- triples / cg ---
@@ -194,6 +208,18 @@ class SnapIndex:
     z_coo_src1: np.ndarray        # [nnz] -> flat u index (layer j1)
     z_coo_src2: np.ndarray        # [nnz] -> flat u index (layer j2)
     z_coo_cg: np.ndarray          # [nnz] cg(mb-pair) * cg(ma-pair)
+    # Half-space COO: the same contraction with every source remapped into
+    # idxu_half space (mirror signs folded into the CG weight, per-source
+    # conjugation as +-1 factors on the imaginary part), the destination in
+    # half space, and dest entries that no contraction ever reads (middle
+    # row 2mb == j, columns 2ma > j — weight 0 everywhere) dropped.
+    z_half_dest: np.ndarray       # [nnz_half] -> idxu_half index
+    z_half_src1: np.ndarray       # [nnz_half] -> idxu_half index
+    z_half_src2: np.ndarray       # [nnz_half] -> idxu_half index
+    z_half_sig1: np.ndarray       # [nnz_half] +-1 conj factor on Im(u1)
+    z_half_sig2: np.ndarray       # [nnz_half] +-1 conj factor on Im(u2)
+    z_half_cg: np.ndarray         # [nnz_half] cg * mirror signs s1*s2
+    z_half_jjz: np.ndarray        # [nnz_half] idxz row (runtime beta gather)
     # --- idxb ---
     idxb_max: int
     idxb_triples: tuple           # (j1, j2, j) with j >= j1 >= j2
@@ -260,6 +286,37 @@ def build_index(twojmax: int, wself: float = 1.0) -> SnapIndex:
         w = _half_weights(j).reshape(-1)
         dedr_weight[idxu_block[j]: idxu_block[j] + (j + 1) ** 2] = w
 
+    # ---- idxu_half: compacted left rows (2mb <= j) + mirror maps ----
+    idxu_half_block = np.zeros(twojmax + 1, dtype=np.int32)
+    c = 0
+    for j in range(twojmax + 1):
+        idxu_half_block[j] = c
+        c += (j // 2 + 1) * (j + 1)
+    idxu_half_max = c
+    full_to_half = np.zeros(idxu_max, dtype=np.int32)
+    full_to_half_conj = np.zeros(idxu_max, dtype=bool)
+    full_to_half_sign = np.ones(idxu_max, dtype=np.float64)
+    half_to_full = np.zeros(idxu_half_max, dtype=np.int32)
+    for j in range(twojmax + 1):
+        for mb in range(j + 1):
+            for ma in range(j + 1):
+                f = idxu_block[j] + mb * (j + 1) + ma
+                if 2 * mb <= j:
+                    h = idxu_half_block[j] + mb * (j + 1) + ma
+                    full_to_half[f] = h
+                    half_to_full[h] = f
+                else:
+                    mbs, mas = j - mb, j - ma
+                    full_to_half[f] = idxu_half_block[j] + mbs * (j + 1) + mas
+                    full_to_half_conj[f] = True
+                    full_to_half_sign[f] = 1.0 if (mb + ma) % 2 == 0 else -1.0
+    self_diag_half = np.array(
+        [idxu_half_block[j] + m * (j + 1) + m
+         for j in range(twojmax + 1) for m in range(j // 2 + 1)],
+        dtype=np.int32,
+    )
+    dedr_weight_half = dedr_weight[half_to_full]
+
     ulevels = tuple(_build_ulevel(j) for j in range(1, twojmax + 1))
 
     # ---- triples + CG blocks ----
@@ -307,6 +364,30 @@ def build_index(twojmax: int, wself: float = 1.0) -> SnapIndex:
     z_coo_src1 = np.array(zs1, dtype=np.int32)
     z_coo_src2 = np.array(zs2, dtype=np.int32)
     z_coo_cg = np.array(zcg, dtype=np.float64)
+
+    # ---- half-space COO: fold the j-mirror into the tables ----
+    # u_full[s] = sign * conj^c(u_half[full_to_half[s]]) turns each product
+    #     u1 * u2  ->  s1*s2 * (v1r*v2r - (σ1 v1i)(σ2 v2i)
+    #                           + i (v1r (σ2 v2i) + (σ1 v1i) v2r))
+    # with σ = -1 where the mirror conjugates: the complex-multiply form is
+    # unchanged if Im gathers carry the σ factor, and s1*s2 folds into cg.
+    # Dest rows are left rows by construction (idxz stores 2mb <= j only);
+    # entries scattering to (2mb == j, 2ma > j) are dropped — every
+    # consumer weights them by exactly 0 (see _half_weights).
+    jjz_all = z_coo_dest
+    dest_full = idxz_jju[jjz_all]
+    dead = ((2 * idxu_mb[dest_full] == idxu_j[dest_full])
+            & (2 * idxu_ma[dest_full] > idxu_j[dest_full]))
+    live = ~dead
+    sig = np.where(full_to_half_conj, -1.0, 1.0)
+    z_half_dest = full_to_half[dest_full[live]]
+    z_half_src1 = full_to_half[z_coo_src1[live]]
+    z_half_src2 = full_to_half[z_coo_src2[live]]
+    z_half_sig1 = sig[z_coo_src1[live]]
+    z_half_sig2 = sig[z_coo_src2[live]]
+    z_half_cg = (z_coo_cg[live] * full_to_half_sign[z_coo_src1[live]]
+                 * full_to_half_sign[z_coo_src2[live]])
+    z_half_jjz = jjz_all[live].astype(np.int32)
 
     # ---- idxb ----
     idxb_triples = tuple(t for t in triples if t[2] >= t[0])
@@ -391,11 +472,20 @@ def build_index(twojmax: int, wself: float = 1.0) -> SnapIndex:
         idxu_block=idxu_block, idxu_max=idxu_max,
         idxu_j=idxu_j, idxu_mb=idxu_mb, idxu_ma=idxu_ma,
         self_diag=self_diag, dedr_weight=dedr_weight,
+        idxu_half_block=idxu_half_block, idxu_half_max=idxu_half_max,
+        half_to_full=half_to_full, full_to_half=full_to_half,
+        full_to_half_conj=full_to_half_conj,
+        full_to_half_sign=full_to_half_sign,
+        self_diag_half=self_diag_half, dedr_weight_half=dedr_weight_half,
         ulevels=ulevels, triples=triples,
         idxz_max=idxz_max, idxz_j1=idxz_j1, idxz_j2=idxz_j2, idxz_j=idxz_j,
         idxz_jju=idxz_jju, idxz_block=idxz_block,
         z_coo_dest=z_coo_dest, z_coo_src1=z_coo_src1,
         z_coo_src2=z_coo_src2, z_coo_cg=z_coo_cg,
+        z_half_dest=z_half_dest, z_half_src1=z_half_src1,
+        z_half_src2=z_half_src2, z_half_sig1=z_half_sig1,
+        z_half_sig2=z_half_sig2, z_half_cg=z_half_cg,
+        z_half_jjz=z_half_jjz,
         idxb_max=idxb_max, idxb_triples=idxb_triples, idxb_block=idxb_block,
         y_jjb=y_jjb, y_fac=y_fac,
         b_coo_dest=b_coo_dest, b_coo_zsrc=b_coo_zsrc,

@@ -265,7 +265,14 @@ IMPLEMENTATIONS = ('baseline', 'adjoint', 'kernel')
 
 def energy_forces(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx, mask,
                   impl: str = 'adjoint', **kw):
-    """Dispatch front-end used by MD / benchmarks."""
+    """Dispatch front-end used by MD / benchmarks.
+
+    impl='kernel' extras (forwarded to ``snap_force_pipeline``):
+    ``layout='half'|'full'`` selects the symmetric half-index planes
+    (default) vs the v1 full planes, ``y_tile`` sizes the Y kernel's COO
+    tiles, and ``mxu_dtype`` (e.g. ``jnp.bfloat16``) casts the Y matmul
+    operands while accumulation stays in ``dtype``.
+    """
     if impl == 'adjoint':
         return energy_forces_adjoint(cfg, beta, beta0, dx, dy, dz,
                                      nbr_idx, mask, **kw)

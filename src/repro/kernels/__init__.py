@@ -5,13 +5,18 @@
 # SNAP kernel suite (paper Sec. VI): snap_u (Wigner recursion),
 # snap_y (adjoint one-hot-matmul contraction), snap_fused_de[_half]
 # (dual-number dU + force contraction).  ``ops.snap_force_pipeline``
-# chains them in one canonical [*, natoms_pad] device layout.
+# chains them in one canonical [*, natoms_pad] device layout —
+# half-index planes by default (layout='half'), full planes kept for
+# A/B (layout='full'); mxu_dtype=bfloat16 opts the Y matmuls into the
+# MXU's low-precision rate with full-precision accumulation.
 
-from .ops import (energy_forces_kernel, snap_dedr_kernel,
-                  snap_force_pipeline, snap_ui_kernel, snap_yi_kernel)
-from .snap_y import snap_y_pallas, y_coef
+from .ops import (energy_forces_kernel, half_planes_to_full,
+                  snap_dedr_kernel, snap_force_pipeline, snap_ui_kernel,
+                  snap_yi_kernel)
+from .snap_y import (snap_y_half_pallas, snap_y_pallas, y_coef, y_coef_half)
 
 __all__ = [
-    'energy_forces_kernel', 'snap_dedr_kernel', 'snap_force_pipeline',
-    'snap_ui_kernel', 'snap_yi_kernel', 'snap_y_pallas', 'y_coef',
+    'energy_forces_kernel', 'half_planes_to_full', 'snap_dedr_kernel',
+    'snap_force_pipeline', 'snap_ui_kernel', 'snap_yi_kernel',
+    'snap_y_half_pallas', 'snap_y_pallas', 'y_coef', 'y_coef_half',
 ]

@@ -15,6 +15,7 @@ from __future__ import annotations
 import math
 from functools import lru_cache
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -96,15 +97,8 @@ def u_level_step(prev_r, prev_i, a_r, a_i, b_r, b_i, j, dtype):
     ca, cb, sgn, _ = level_coefs(j, dtype)
     p_r = prev_r[:rows]            # [rows, j, L]
     p_i = prev_i[:rows]
-    # conj(a) * u  and  conj(b) * u
-    au_r = a_r * p_r + a_i * p_i
-    au_i = a_r * p_i - a_i * p_r
-    bu_r = b_r * p_r + b_i * p_i
-    bu_i = b_r * p_i - b_i * p_r
-    pad_a = [(0, 0), (0, 1), (0, 0)]
-    pad_b = [(0, 0), (1, 0), (0, 0)]
-    left_r = jnp.pad(ca * au_r, pad_a) + jnp.pad(cb * bu_r, pad_b)
-    left_i = jnp.pad(ca * au_i, pad_a) + jnp.pad(cb * bu_i, pad_b)
+    left_r, left_i = level_stitch(ca, cb, conj_mul(a_r, a_i, p_r, p_i),
+                                  conj_mul(b_r, b_i, p_r, p_i))
     # symmetry fill: u(j-mb, j-ma) -> sign * conj
     nmir = j + 1 - rows
     src_r = jnp.flip(left_r[:nmir], axis=(0, 1))
@@ -112,6 +106,62 @@ def u_level_step(prev_r, prev_i, a_r, a_i, b_r, b_i, j, dtype):
     full_r = jnp.concatenate([left_r, sgn * src_r], axis=0)
     full_i = jnp.concatenate([left_i, -sgn * src_i], axis=0)
     return full_r, full_i
+
+
+def mirror_row(row_r, row_i, j_prev, mbp, dtype):
+    """Reconstruct row mb'=mbp of a full layer j_prev from its mirror
+    source row (left storage).  row_*: [cols, L] source row ALREADY
+    selected (row j_prev - mbp reversed by caller).  Applies the
+    (-1)^(mb'+ma') conj transform."""
+    cols = j_prev + 1
+    ma = jax.lax.broadcasted_iota(dtype, (cols, 1), 0)
+    sgn = 1.0 - 2.0 * jnp.mod(ma + mbp, 2.0)
+    return sgn * row_r, -sgn * row_i
+
+
+def half_prev_rows(left_r, left_i, j, dtype):
+    """Rows 0..j//2 of full layer j-1, given left storage of layer j-1
+    (rows 0..(j-1)//2).  For even j appends the one mirrored row."""
+    if j % 2 == 1:
+        return left_r, left_i
+    jp = j - 1
+    src_r = jnp.flip(left_r[j // 2 - 1], axis=0)
+    src_i = jnp.flip(left_i[j // 2 - 1], axis=0)
+    mr, mi = mirror_row(src_r, src_i, jp, j // 2, dtype)
+    return (jnp.concatenate([left_r, mr[None]], axis=0),
+            jnp.concatenate([left_i, mi[None]], axis=0))
+
+
+def conj_mul(c_r, c_i, p_r, p_i):
+    """conj(c) * p on split re/im planes."""
+    return c_r * p_r + c_i * p_i, c_r * p_i - c_i * p_r
+
+
+def level_stitch(ca, cb, au, bu):
+    """Column-stitch of one recursion level: the conj(a)-term feeds
+    column ma, the conj(b)-term column ma+1, weighted by the rootpq
+    coefficient matrices.  au/bu: (re, im) pairs [rows, j, L]; returns
+    the new left rows [rows, j+1, L]."""
+    pad_a = [(0, 0), (0, 1), (0, 0)]
+    pad_b = [(0, 0), (1, 0), (0, 0)]
+    (au_r, au_i), (bu_r, bu_i) = au, bu
+    return (jnp.pad(ca * au_r, pad_a) + jnp.pad(cb * bu_r, pad_b),
+            jnp.pad(ca * au_i, pad_a) + jnp.pad(cb * bu_i, pad_b))
+
+
+def u_half_level_step(left_r, left_i, a_r, a_i, b_r, b_i, j, dtype):
+    """One recursion level on left-rows-only storage (no mirror fill).
+
+    left_*: [ (j-1)//2 + 1, j, L ] left storage of layer j-1.  Returns the
+    left storage of layer j: [j//2 + 1, j+1, L].  Identical values to the
+    left rows of :func:`u_level_step` — the recursion only ever reads the
+    previous layer's rows mb <= j//2 (one of which is mirror-reconstructed
+    for even j).
+    """
+    ca, cb, _, _ = level_coefs(j, dtype)
+    p_r, p_i = half_prev_rows(left_r, left_i, j, dtype)
+    return level_stitch(ca, cb, conj_mul(a_r, a_i, p_r, p_i),
+                        conj_mul(b_r, b_i, p_r, p_i))
 
 
 def geom_ck(x, y, z, rcut, rmin0, rfac0, switch_flag):

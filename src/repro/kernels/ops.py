@@ -11,6 +11,17 @@ U -> Y -> fused dE runs entirely on-device in that layout — no complex
 reassembly, transpose, or re-pad between stages (see DESIGN.md).  The only
 layout conversions are the entry ([natoms, nnbor] -> [nnbor, 4, natoms_pad])
 and the exit (per-pair dE -> global force assembly).
+
+``layout='half'`` (the default) runs every stage on the symmetric
+**half-index planes** ``[idxu_half_max, natoms_pad]``: the U kernel only
+ever produces the left rows 2mb <= j, the Y kernel gathers/scatters the
+halved space through mirror-folded COO tables, and the fused-dE kernel
+consumes the half planes natively — no full-plane tensor exists between
+entry and force assembly.  ``layout='full'`` keeps the v1 full-plane
+pipeline alive for A/B benchmarking (see benchmarks/b_kernels.py).
+``mxu_dtype`` (half layout only) casts the Y kernel's matmul operands,
+e.g. ``jnp.bfloat16`` for the MXU's native low-precision rate with f32
+accumulation.
 """
 
 from __future__ import annotations
@@ -23,8 +34,12 @@ from repro.core.snap import SnapConfig, assemble_forces, bzero_shift
 
 from .common import LANES, default_interpret
 from .snap_fused_de import snap_fused_de_pallas
-from .snap_u import snap_u_pallas
-from .snap_y import Y_TILE, snap_y_pallas, y_coef
+from .snap_fused_de_half import snap_fused_de_half_pallas
+from .snap_u import snap_u_half_pallas, snap_u_pallas
+from .snap_y import (Y_TILE, snap_y_half_pallas, snap_y_pallas, y_coef,
+                     y_coef_half)
+
+LAYOUTS = ('half', 'full')
 
 
 def _kernel_layout(cfg: SnapConfig, dx, dy, dz, mask, dtype):
@@ -43,66 +58,98 @@ def _kernel_layout(cfg: SnapConfig, dx, dy, dz, mask, dtype):
     return disp, ok, natoms
 
 
-def _self_planes(cfg: SnapConfig, dtype):
-    """Wigner self-contribution as a lane-broadcastable [idxu_max, 1] plane."""
+def _self_planes(cfg: SnapConfig, dtype, layout='full'):
+    """Wigner self-contribution as a lane-broadcastable [*, 1] plane."""
     idx = cfg.index
-    v = np.zeros(idx.idxu_max)
-    v[idx.self_diag] = cfg.wself
+    if layout == 'half':
+        v = np.zeros(idx.idxu_half_max)
+        v[idx.self_diag_half] = cfg.wself
+    else:
+        v = np.zeros(idx.idxu_max)
+        v[idx.self_diag] = cfg.wself
     return jnp.asarray(v, dtype)[:, None]
 
 
-def _dedr_fn(variant: str):
-    if variant == 'half':
-        from .snap_fused_de_half import snap_fused_de_half_pallas as fn
-        return fn
-    return snap_fused_de_pallas
+def half_planes_to_full(cfg: SnapConfig, h_r, h_i):
+    """Expand [idxu_half_max, *] half planes to full via the j-mirror:
+    u_full = sign * conj^c(u_half[src]).  Test/benchmark plumbing only —
+    the pipeline itself never reconstructs full planes."""
+    idx = cfg.index
+    sgn = jnp.asarray(idx.full_to_half_sign, h_r.dtype)[:, None]
+    sig = jnp.asarray(
+        np.where(idx.full_to_half_conj, -1.0, 1.0), h_i.dtype)[:, None]
+    return sgn * h_r[idx.full_to_half], sgn * sig * h_i[idx.full_to_half]
 
 
 def energy_from_ylist_lanes(cfg: SnapConfig, ut_r, ut_i, y_r, y_i,
                             beta, beta0):
     """Per-atom energy in kernel layout: (2/3) sum_jju w Re(conj(U) Y).
 
-    All operands are [idxu_max, natoms_pad] planes; the reduction runs over
-    the sublane (jju) axis so the energy never leaves the kernel layout.
-    Mirrors :func:`repro.core.snap.energy_from_ylist` exactly.
+    Operands are [idxu_max, natoms_pad] or [idxu_half_max, natoms_pad]
+    planes (selected by shape); the reduction runs over the sublane (jju)
+    axis so the energy never leaves the kernel layout.  The half form is
+    exact because ``dedr_weight`` is zero on every mirrored row.  Mirrors
+    :func:`repro.core.snap.energy_from_ylist` exactly.
     """
     idx = cfg.index
-    w = jnp.asarray(idx.dedr_weight, ut_r.dtype)[:, None]
+    w = (idx.dedr_weight_half if ut_r.shape[0] == idx.idxu_half_max
+         else idx.dedr_weight)
+    w = jnp.asarray(w, ut_r.dtype)[:, None]
     e_raw = (2.0 / 3.0) * jnp.sum(w * (ut_r * y_r + ut_i * y_i), axis=0)
     return beta0 + e_raw - bzero_shift(cfg, beta, e_raw.dtype)
 
 
 def snap_force_pipeline(cfg: SnapConfig, beta, beta0, dx, dy, dz, nbr_idx,
                         mask, dtype=jnp.float32, interpret=None,
-                        with_energy=True, variant: str = 'half',
-                        y_tile: int = Y_TILE, shard=None):
+                        with_energy=True, layout: str = 'half',
+                        y_tile: int = Y_TILE, mxu_dtype=None, shard=None):
     """Zero-relayout kernel pipeline: Pallas U -> Pallas Y -> Pallas fused dE.
 
     Every inter-stage tensor stays in the canonical [*, natoms_pad] device
     layout; the per-entry Y coefficient (cg * y_fac * beta gather, no atom
     axis) is the only stage input computed at the JAX level.
 
+    layout='half' (default): all inter-stage planes are half-index
+    ``[idxu_half_max, natoms_pad]`` — ~1.9x less HBM plane traffic and
+    ~2x smaller Y matmuls; no full plane is ever materialized.
+    layout='full': the v1 full-plane pipeline, kept for A/B measurement.
+
+    mxu_dtype: optional dtype for the Y kernel's matmul operands (half
+    layout only), e.g. ``jnp.bfloat16``; accumulation stays in ``dtype``.
+
     shard: optional ``(axis_name, n_shards)`` for the atom-sharded path —
     the Pallas stages are untouched (atoms already live on the lane axis,
     per shard), only the exit force assembly reduce-scatters.
     """
+    if layout not in LAYOUTS:
+        raise ValueError(f'unknown layout {layout!r}; choose from {LAYOUTS}')
+    if mxu_dtype is not None and layout != 'half':
+        raise ValueError(
+            "mxu_dtype is a half-layout feature (the full-plane Y kernel "
+            "has no low-precision path); drop it or use layout='half'")
     if interpret is None:
         interpret = default_interpret()
     natoms = dx.shape[0]
     disp, ok, _ = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
+    geo = dict(twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+               rfac0=cfg.rfac0, switch_flag=cfg.switch_flag,
+               interpret=interpret)
 
-    ut_r, ut_i = snap_u_pallas(
-        disp, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
-        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
-    ut_r = ut_r + _self_planes(cfg, dtype)           # elementwise, in-layout
-
-    coef = y_coef(beta, cfg.twojmax, y_tile).astype(dtype)
-    y_r, y_i = snap_y_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
-                             tile=y_tile, interpret=interpret)
-
-    dedr = _dedr_fn(variant)(
-        disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
-        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
+    if layout == 'half':
+        ut_r, ut_i = snap_u_half_pallas(disp, **geo)
+        ut_r = ut_r + _self_planes(cfg, dtype, 'half')   # elementwise
+        coef = y_coef_half(beta, cfg.twojmax, y_tile).astype(dtype)
+        y_r, y_i = snap_y_half_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
+                                      tile=y_tile, mxu_dtype=mxu_dtype,
+                                      interpret=interpret)
+        dedr = snap_fused_de_half_pallas(disp, y_r, y_i, **geo)
+    else:
+        ut_r, ut_i = snap_u_pallas(disp, **geo)
+        ut_r = ut_r + _self_planes(cfg, dtype)           # elementwise
+        coef = y_coef(beta, cfg.twojmax, y_tile).astype(dtype)
+        y_r, y_i = snap_y_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
+                                 tile=y_tile, interpret=interpret)
+        dedr = snap_fused_de_pallas(disp, y_r, y_i, **geo)
 
     # pipeline exit: per-pair dE back to [natoms, nnbor, 3] force assembly
     axis_name, n_shards = shard if shard is not None else (None, 1)
@@ -159,31 +206,59 @@ def make_sharded_force_fn(cfg: SnapConfig, beta, beta0, mesh, axis='data',
 # ---------------------------------------------------------------------------
 
 def snap_ui_kernel(cfg: SnapConfig, dx, dy, dz, mask, dtype=jnp.float32,
-                   interpret=None):
-    """Ulisttot via the Pallas kernel: complex [natoms, idxu_max]."""
+                   interpret=None, layout: str = 'half'):
+    """Ulisttot via the Pallas kernel: complex [natoms, idxu_max].
+
+    layout='half' runs the half-plane kernel and mirror-expands the result
+    (test/benchmark plumbing — the pipeline itself stays in half planes);
+    layout='full' runs the v1 full-plane kernel.
+    """
     if interpret is None:
         interpret = default_interpret()
     disp, ok, natoms = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
-    ut_r, ut_i = snap_u_pallas(
-        disp, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
-        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
-    ut_r = ut_r + _self_planes(cfg, dtype)
+    geo = dict(twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+               rfac0=cfg.rfac0, switch_flag=cfg.switch_flag,
+               interpret=interpret)
+    if layout == 'half':
+        h_r, h_i = snap_u_half_pallas(disp, **geo)
+        h_r = h_r + _self_planes(cfg, dtype, 'half')
+        ut_r, ut_i = half_planes_to_full(cfg, h_r, h_i)
+    else:
+        ut_r, ut_i = snap_u_pallas(disp, **geo)
+        ut_r = ut_r + _self_planes(cfg, dtype)
     return (ut_r[:, :natoms] + 1j * ut_i[:, :natoms]).T
 
 
 def snap_yi_kernel(cfg: SnapConfig, ulisttot, beta, dtype=jnp.float32,
-                   interpret=None, y_tile: int = Y_TILE):
+                   interpret=None, y_tile: int = Y_TILE,
+                   layout: str = 'half', mxu_dtype=None):
     """Adjoint Y via the Pallas kernel: complex [natoms, idxu_max].
 
-    Layout-converting wrapper around :func:`snap_y_pallas` for parity tests
-    and stage benchmarks; the pipeline itself never leaves plane layout.
+    Layout-converting wrapper around :func:`snap_y_[half_]pallas` for
+    parity tests and stage benchmarks; the pipeline itself never leaves
+    plane layout.  The half layout scatters its compacted output back into
+    the full index space (mirrored rows stay 0, like ``compute_ylist``);
+    the dropped weight-0 middle-row columns also read 0 — compare on the
+    ``dedr_weight > 0`` support.
     """
     if interpret is None:
         interpret = default_interpret()
+    if mxu_dtype is not None and layout != 'half':
+        raise ValueError("mxu_dtype requires layout='half'")
+    idx = cfg.index
     natoms = ulisttot.shape[0]
     pad = (-natoms) % LANES
-    ut_r = jnp.pad(ulisttot.real.T.astype(dtype), [(0, 0), (0, pad)])
-    ut_i = jnp.pad(ulisttot.imag.T.astype(dtype), [(0, 0), (0, pad)])
+    ut = ulisttot[:, idx.half_to_full] if layout == 'half' else ulisttot
+    ut_r = jnp.pad(ut.real.T.astype(dtype), [(0, 0), (0, pad)])
+    ut_i = jnp.pad(ut.imag.T.astype(dtype), [(0, 0), (0, pad)])
+    if layout == 'half':
+        coef = y_coef_half(beta, cfg.twojmax, y_tile).astype(dtype)
+        y_r, y_i = snap_y_half_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
+                                      tile=y_tile, mxu_dtype=mxu_dtype,
+                                      interpret=interpret)
+        y_h = (y_r[:, :natoms] + 1j * y_i[:, :natoms]).T
+        out = jnp.zeros((natoms, idx.idxu_max), y_h.dtype)
+        return out.at[:, idx.half_to_full].set(y_h)
     coef = y_coef(beta, cfg.twojmax, y_tile).astype(dtype)
     y_r, y_i = snap_y_pallas(ut_r, ut_i, coef, twojmax=cfg.twojmax,
                              tile=y_tile, interpret=interpret)
@@ -192,20 +267,28 @@ def snap_yi_kernel(cfg: SnapConfig, ulisttot, beta, dtype=jnp.float32,
 
 def snap_dedr_kernel(cfg: SnapConfig, dx, dy, dz, mask, ylist,
                      dtype=jnp.float32, interpret=None,
-                     variant: str = 'half'):
+                     layout: str = 'half'):
     """Fused dE/dr per pair via the Pallas kernel: [natoms, nnbor, 3].
 
-    variant='half' (default) carries only the symmetric half of the
-    recursion state (beyond-paper §Perf iteration); 'full' is the v1
-    kernel mirroring every level.
+    layout='half' (default) gathers the half rows of ``ylist`` and runs
+    the native half-plane kernel (half recursion state AND half Y
+    streams); 'full' is the v1 kernel mirroring every level.
     """
     if interpret is None:
         interpret = default_interpret()
+    idx = cfg.index
     disp, ok, natoms = _kernel_layout(cfg, dx, dy, dz, mask, dtype)
     pad = disp.shape[-1] - natoms
-    y_r = jnp.pad(ylist.real.T.astype(dtype), [(0, 0), (0, pad)])
-    y_i = jnp.pad(ylist.imag.T.astype(dtype), [(0, 0), (0, pad)])
-    dedr = _dedr_fn(variant)(
-        disp, y_r, y_i, twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
-        rfac0=cfg.rfac0, switch_flag=cfg.switch_flag, interpret=interpret)
+    geo = dict(twojmax=cfg.twojmax, rcut=cfg.rcut, rmin0=cfg.rmin0,
+               rfac0=cfg.rfac0, switch_flag=cfg.switch_flag,
+               interpret=interpret)
+    if layout == 'half':
+        yl = ylist[:, idx.half_to_full]
+        y_r = jnp.pad(yl.real.T.astype(dtype), [(0, 0), (0, pad)])
+        y_i = jnp.pad(yl.imag.T.astype(dtype), [(0, 0), (0, pad)])
+        dedr = snap_fused_de_half_pallas(disp, y_r, y_i, **geo)
+    else:
+        y_r = jnp.pad(ylist.real.T.astype(dtype), [(0, 0), (0, pad)])
+        y_i = jnp.pad(ylist.imag.T.astype(dtype), [(0, 0), (0, pad)])
+        dedr = snap_fused_de_pallas(disp, y_r, y_i, **geo)
     return dedr[:, :3, :natoms].transpose(2, 0, 1)

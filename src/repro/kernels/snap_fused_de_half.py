@@ -1,21 +1,24 @@
-"""Half-plane variant of the fused dE kernel (beyond-paper SNAP iteration).
+"""Half-plane fused dE kernel (beyond-paper SNAP iteration).
 
 Observation: the force contraction dE = 2 sum w Re(conj(dU) Y) has w == 0
 for all rows 2*mb > j — yet the v1 kernel (like the reference) materializes
 the FULL (j+1)^2 layer of u and of all three tangents at every level, only
 to discard the mirrored half in the contraction.
 
-This variant carries ONLY the left rows (mb <= j/2) of u and du through
-the recursion.  The recursion needs prev rows mb <= j/2 of layer j-1;
-for even j the single extra row is reconstructed on the fly from the
-symmetry  u(j-1-mb', j-1-ma') -> (-1)^(mb'+ma') conj  (one row instead of
-a half-layer mirror fill).
+This kernel carries ONLY the left rows (mb <= j/2) of u and du through
+the recursion (shared helpers in :mod:`repro.kernels.common`: the
+recursion needs prev rows mb <= j/2 of layer j-1; for even j the single
+extra row is mirror-reconstructed on the fly), and it consumes the
+adjoint Y **natively in half-plane layout** — ``[idxu_half_max, L]``
+planes straight from :func:`repro.kernels.snap_y.snap_y_half_pallas`,
+no full-plane reconstruction anywhere.  Each half layer j is contiguous
+at ``idxu_half_block[j]`` so the per-level Y block is one static slice.
 
 Counted effects vs v1 (per neighbor, 2J=8):
   - level-state elements stored:     285 -> 165   (1.73x fewer)
   - mirror transform ops:            ~480 -> ~60  (8x fewer)
   - VMEM live planes (u + 3 du):     2*(J+1)^2*4 -> ~half
-The contraction itself was already half-plane; its cost is unchanged.
+  - Y planes streamed from HBM:      285 -> 155 rows (1.84x less traffic)
 """
 
 from __future__ import annotations
@@ -27,66 +30,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.indices import build_index
-from .common import LANES, geom_ck_grad, level_coefs
+from .common import (LANES, conj_mul, geom_ck_grad, half_prev_rows,
+                     level_coefs, level_stitch)
 
 
-def _mirror_row(row_r, row_i, j_prev, mbp, dtype):
-    """Reconstruct row mb'=mbp of a full layer j_prev from its mirror
-    source row (left storage).  row_*: [cols, L] source row ALREADY
-    selected (row j_prev - mbp reversed by caller).  Applies the
-    (-1)^(mb'+ma') conj transform."""
-    cols = j_prev + 1
-    ma = jax.lax.broadcasted_iota(dtype, (cols, 1), 0)
-    sgn = 1.0 - 2.0 * jnp.mod(ma + mbp, 2.0)
-    return sgn * row_r, -sgn * row_i
-
-
-def _prev_rows(left_r, left_i, j, dtype):
-    """Rows 0..j//2 of full layer j-1, given left storage of layer j-1
-    (rows 0..(j-1)//2).  For even j appends the one mirrored row."""
-    if j % 2 == 1:
-        return left_r, left_i
-    jp = j - 1
-    src_r = jnp.flip(left_r[j // 2 - 1], axis=0)
-    src_i = jnp.flip(left_i[j // 2 - 1], axis=0)
-    mr, mi = _mirror_row(src_r, src_i, jp, j // 2, dtype)
-    return (jnp.concatenate([left_r, mr[None]], axis=0),
-            jnp.concatenate([left_i, mi[None]], axis=0))
+def _cm_add(x, y):
+    """Elementwise sum of two (re, im) pairs (product-rule accumulation)."""
+    return x[0] + y[0], x[1] + y[1]
 
 
 def _half_level_step(pl_r, pl_i, dpl_r, dpl_i, a, da, b, db, j, dtype):
     """Advance left-rows-only (u, du[3]) one level.
 
     pl_*: [rows_{j-1}, j, L] left storage of layer j-1.
-    Returns left storage of layer j: [j//2+1, j+1, L] (+ tangents)."""
-    rows = j // 2 + 1
+    Returns left storage of layer j: [j//2+1, j+1, L] (+ tangents).
+    The value recursion is exactly :func:`common.u_half_level_step`;
+    the tangents apply the product rule d(conj(c) u) = conj(dc) u +
+    conj(c) du to each term before the same column stitch."""
     ca, cb, _, _ = level_coefs(j, dtype)
-    pad_a = [(0, 0), (0, 1), (0, 0)]
-    pad_b = [(0, 0), (1, 0), (0, 0)]
     a_r, a_i = a
     b_r, b_i = b
     da_r, da_i = da
     db_r, db_i = db
 
-    p_r, p_i = _prev_rows(pl_r, pl_i, j, dtype)
-    au_r = a_r * p_r + a_i * p_i
-    au_i = a_r * p_i - a_i * p_r
-    bu_r = b_r * p_r + b_i * p_i
-    bu_i = b_r * p_i - b_i * p_r
-    left_r = jnp.pad(ca * au_r, pad_a) + jnp.pad(cb * bu_r, pad_b)
-    left_i = jnp.pad(ca * au_i, pad_a) + jnp.pad(cb * bu_i, pad_b)
+    p_r, p_i = half_prev_rows(pl_r, pl_i, j, dtype)
+    left_r, left_i = level_stitch(ca, cb, conj_mul(a_r, a_i, p_r, p_i),
+                                  conj_mul(b_r, b_i, p_r, p_i))
 
     dfull_r, dfull_i = [], []
     for k in range(3):
-        dp_r, dp_i = _prev_rows(dpl_r[k], dpl_i[k], j, dtype)
-        dau_r = da_r[k] * p_r + da_i[k] * p_i + a_r * dp_r + a_i * dp_i
-        dau_i = da_r[k] * p_i - da_i[k] * p_r + a_r * dp_i - a_i * dp_r
-        dbu_r = db_r[k] * p_r + db_i[k] * p_i + b_r * dp_r + b_i * dp_i
-        dbu_i = db_r[k] * p_i - db_i[k] * p_r + b_r * dp_i - b_i * dp_r
-        dfull_r.append(jnp.pad(ca * dau_r, pad_a)
-                       + jnp.pad(cb * dbu_r, pad_b))
-        dfull_i.append(jnp.pad(ca * dau_i, pad_a)
-                       + jnp.pad(cb * dbu_i, pad_b))
+        dp_r, dp_i = half_prev_rows(dpl_r[k], dpl_i[k], j, dtype)
+        dau = _cm_add(conj_mul(da_r[k], da_i[k], p_r, p_i),
+                      conj_mul(a_r, a_i, dp_r, dp_i))
+        dbu = _cm_add(conj_mul(db_r[k], db_i[k], p_r, p_i),
+                      conj_mul(b_r, b_i, dp_r, dp_i))
+        dl_r, dl_i = level_stitch(ca, cb, dau, dbu)
+        dfull_r.append(dl_r)
+        dfull_i.append(dl_i)
     return left_r, left_i, dfull_r, dfull_i
 
 
@@ -111,8 +91,8 @@ def _fused_de_half_kernel(disp_ref, y_r_ref, y_i_ref, out_ref, *, twojmax,
         acc = [jnp.zeros((LANES,), dtype) for _ in range(3)]
 
         def contract(j, u_r, u_i, du_r, du_i, acc):
-            """Left rows of Y_j are contiguous at the layer base."""
-            base = idx.idxu_block[j]
+            """Half layer j of Y is exactly the slice at its block base."""
+            base = idx.idxu_half_block[j]
             rows = j // 2 + 1
             n = rows * (j + 1)
             ys_r = y_r_ref[base:base + n, :].reshape(rows, j + 1, LANES)
@@ -147,21 +127,25 @@ def _fused_de_half_kernel(disp_ref, y_r_ref, y_i_ref, out_ref, *, twojmax,
 def snap_fused_de_half_pallas(disp, y_r, y_i, *, twojmax, rcut, rmin0=0.0,
                               rfac0=0.99363, switch_flag=True,
                               interpret=True):
-    """Same contract as snap_fused_de_pallas, half-plane recursion state."""
+    """Same contract as snap_fused_de_pallas, except ``y_r``/``y_i`` are
+    **half planes** ``[idxu_half_max, natoms_pad]`` (the native output of
+    the half-plane Y kernel); recursion state is half-plane throughout."""
     nnbor, four, natoms_pad = disp.shape
     assert four == 4 and natoms_pad % LANES == 0
     idx = build_index(twojmax)
+    assert y_r.shape == (idx.idxu_half_max, natoms_pad), y_r.shape
     dtype = disp.dtype
     kernel = partial(
         _fused_de_half_kernel, twojmax=twojmax, nnbor=nnbor, rcut=rcut,
         rmin0=rmin0, rfac0=rfac0, switch_flag=switch_flag, dtype=dtype)
     grid = (natoms_pad // LANES,)
+    nh = idx.idxu_half_max
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((nnbor, 4, LANES), lambda i: (0, 0, i)),
-                  pl.BlockSpec((idx.idxu_max, LANES), lambda i: (0, i)),
-                  pl.BlockSpec((idx.idxu_max, LANES), lambda i: (0, i))],
+                  pl.BlockSpec((nh, LANES), lambda i: (0, i)),
+                  pl.BlockSpec((nh, LANES), lambda i: (0, i))],
         out_specs=pl.BlockSpec((nnbor, 4, LANES), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct((nnbor, 4, natoms_pad), dtype),
         interpret=interpret,

@@ -15,6 +15,12 @@ VMEM budget per grid step (2J=14, fp32): inputs nnbor*4*128*4 B (~0.4 MB for
 26 neighbors) + 2 output planes 1240*128*4 B (~1.3 MB) + live recursion
 state < 0.5 MB — far under the ~128 MB/core budget, leaving room for
 multiple in-flight grid steps.
+
+``snap_u_half_pallas`` is the half-plane variant (pipeline default): the
+recursion carries only the symmetric left rows 2mb <= j and the output
+planes are ``[idxu_half_max, natoms_pad]`` (652 vs 1240 rows at 2J=14) —
+the mirror fill disappears from the per-level step entirely and the
+emitted HBM plane traffic drops ~1.9x.
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.indices import build_index
-from .common import LANES, geom_ck, u_level_step
+from .common import LANES, geom_ck, u_half_level_step, u_level_step
 
 
 def _snap_u_kernel(disp_ref, out_r_ref, out_i_ref, *, twojmax, nnbor,
@@ -83,5 +89,65 @@ def snap_u_pallas(disp, *, twojmax, rcut, rmin0=0.0, rfac0=0.99363,
                    pl.BlockSpec((idx.idxu_max, LANES), lambda i: (0, i))],
         out_shape=[jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype),
                    jax.ShapeDtypeStruct((idx.idxu_max, natoms_pad), dtype)],
+        interpret=interpret,
+    )(disp)
+
+
+def _snap_u_half_kernel(disp_ref, out_r_ref, out_i_ref, *, twojmax, nnbor,
+                        rcut, rmin0, rfac0, switch_flag, dtype):
+    """Half-plane variant: the recursion state is left-rows-only from the
+    start (no per-level mirror fill at all), and the accumulated output is
+    the compacted ``[idxu_half_max, LANES]`` plane."""
+    idx = build_index(twojmax)
+    acc_r = jnp.zeros((idx.idxu_half_max, LANES), dtype)
+    acc_i = jnp.zeros((idx.idxu_half_max, LANES), dtype)
+    for k in range(nnbor):
+        x = disp_ref[k, 0, :]
+        y = disp_ref[k, 1, :]
+        z = disp_ref[k, 2, :]
+        m = disp_ref[k, 3, :]
+        a_r, a_i, b_r, b_i, sfac = geom_ck(
+            x, y, z, rcut, rmin0, rfac0, switch_flag)
+        sfac = sfac * m
+        lvl_r = jnp.ones((1, 1, LANES), dtype)
+        lvl_i = jnp.zeros((1, 1, LANES), dtype)
+        outs_r = [sfac[None, :]]
+        outs_i = [jnp.zeros((1, LANES), dtype)]
+        for j in range(1, twojmax + 1):
+            lvl_r, lvl_i = u_half_level_step(
+                lvl_r, lvl_i, a_r, a_i, b_r, b_i, j, dtype)
+            n = (j // 2 + 1) * (j + 1)
+            outs_r.append(sfac * lvl_r.reshape(n, LANES))
+            outs_i.append(sfac * lvl_i.reshape(n, LANES))
+        acc_r = acc_r + jnp.concatenate(outs_r, axis=0)
+        acc_i = acc_i + jnp.concatenate(outs_i, axis=0)
+    out_r_ref[...] = acc_r
+    out_i_ref[...] = acc_i
+
+
+def snap_u_half_pallas(disp, *, twojmax, rcut, rmin0=0.0, rfac0=0.99363,
+                       switch_flag=True, interpret=True):
+    """Half-plane U: same contract as :func:`snap_u_pallas` but the output
+    planes are ``[idxu_half_max, natoms_pad]`` — only the symmetric left
+    rows (2mb <= j) ever exist, in HBM or VMEM.  The mirrored rows are
+    recoverable through ``SnapIndex.full_to_half``; the downstream kernels
+    never need them materialized."""
+    nnbor, four, natoms_pad = disp.shape
+    assert four == 4 and natoms_pad % LANES == 0
+    idx = build_index(twojmax)
+    dtype = disp.dtype
+    kernel = partial(
+        _snap_u_half_kernel, twojmax=twojmax, nnbor=nnbor, rcut=rcut,
+        rmin0=rmin0, rfac0=rfac0, switch_flag=switch_flag, dtype=dtype)
+    grid = (natoms_pad // LANES,)
+    nh = idx.idxu_half_max
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((nnbor, 4, LANES), lambda i: (0, 0, i))],
+        out_specs=[pl.BlockSpec((nh, LANES), lambda i: (0, i)),
+                   pl.BlockSpec((nh, LANES), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((nh, natoms_pad), dtype),
+                   jax.ShapeDtypeStruct((nh, natoms_pad), dtype)],
         interpret=interpret,
     )(disp)

@@ -19,6 +19,23 @@ Layout: atoms on the 128-wide lane axis ([idxu_max, natoms_pad] planes,
 identical to snap_u / snap_fused_de), grid = (lane tiles, COO tiles) with
 the partial-Y accumulator revisiting its VMEM block across the inner COO
 axis.  Index tables stream through VMEM one [1, tile] row at a time.
+
+The **half-plane** variant (:func:`snap_y_half_pallas`) indexes the
+symmetric half space instead: U planes come in as ``[idxu_half_max, L]``
+(the mirror fold ``u(j,mb,ma) = (-1)^(mb+ma) conj(u(j,j-mb,j-ma))`` is
+pre-applied to the COO tables at build time — see
+``SnapIndex.z_half_*``), gathers carry a per-entry ±1 conjugation factor
+on the imaginary plane, and the scatter lands in the half space too.
+Both one-hot operand axes shrink ~1.9x, so matmul FLOPs, one-hot build
+work, and U/Y plane traffic all near-halve; dead destination entries
+(weight-0 middle-row columns) are dropped from the COO axis as well.
+
+A ``mxu_dtype`` knob (default: the plane dtype) casts every operand
+feeding ``jnp.dot`` — one-hots and U planes on the gather side, the
+coefficient-scaled scatter one-hot and the Z products on the scatter
+side — while ``preferred_element_type`` keeps accumulation in the plane
+dtype.  ``mxu_dtype=jnp.bfloat16`` opens the MXU's native bf16 rate on
+the one pipeline stage that is matmul-bound.
 """
 
 from __future__ import annotations
@@ -137,3 +154,130 @@ def snap_y_pallas(ut_r, ut_i, coef, *, twojmax, tile=Y_TILE, interpret=True):
         interpret=interpret,
     )(jnp.asarray(src1), jnp.asarray(src2), jnp.asarray(dest), coef,
       ut_r, ut_i)
+
+
+# ---------------------------------------------------------------------------
+# half-plane variant
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=16)
+def _y_half_coo_tiles(twojmax: int, tile: int):
+    """Half-space COO tables padded to [ntiles, tile] (pad rows: cg = 0).
+
+    Returns (src1, src2, sig1, sig2, dest, cg, jjz): half-space gather
+    indices, ±1 conjugation factors for the imaginary gathers, half-space
+    scatter destination, mirror-folded CG product, and the idxz row of
+    each entry (runtime beta gather).
+    """
+    idx = build_index(twojmax)
+    nnz = idx.z_half_dest.shape[0]
+    ntiles = max(1, -(-nnz // tile))
+    pad = ntiles * tile - nnz
+
+    def p(a, dtype, fill=0):
+        return np.pad(a, (0, pad), constant_values=fill) \
+            .astype(dtype).reshape(ntiles, tile)
+
+    return (p(idx.z_half_src1, np.int32),
+            p(idx.z_half_src2, np.int32),
+            p(idx.z_half_sig1, np.float64, 1),
+            p(idx.z_half_sig2, np.float64, 1),
+            p(idx.z_half_dest, np.int32),
+            p(idx.z_half_cg, np.float64),
+            p(idx.z_half_jjz, np.int32))
+
+
+def _snap_y_half_kernel(src1_ref, src2_ref, sig1_ref, sig2_ref, dest_ref,
+                        coef_ref, ut_r_ref, ut_i_ref, y_r_ref, y_i_ref, *,
+                        idxu_half_max, tile, dtype, mxu_dtype):
+    """One (lane tile, COO tile) step on the halved index space.
+
+    The imaginary gathers carry the mirror conjugation as a per-entry ±1
+    factor: with u_full = s·conj^c(u_half), writing ṽi = σ·vi (σ = -1
+    where c) keeps the complex-multiply form unchanged while s folds
+    into the scatter coefficient.  σ is constant along each one-hot row,
+    so it is applied *after* the gather matmul on the [tile, LANES]
+    result — no signed one-hot copy ever exists — and the body is the
+    full kernel's body with two extra [1, tile] sign rows and every
+    matmul ~2x smaller.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        y_r_ref[...] = jnp.zeros((idxu_half_max, LANES), dtype)
+        y_i_ref[...] = jnp.zeros((idxu_half_max, LANES), dtype)
+
+    iu_g = jax.lax.broadcasted_iota(jnp.int32, (tile, idxu_half_max), 1)
+    g1 = (src1_ref[0, :][:, None] == iu_g).astype(mxu_dtype)
+    g2 = (src2_ref[0, :][:, None] == iu_g).astype(mxu_dtype)
+
+    ut_r = ut_r_ref[...].astype(mxu_dtype)
+    ut_i = ut_i_ref[...].astype(mxu_dtype)
+    dot = partial(jnp.dot, preferred_element_type=dtype)
+    v1r = dot(g1, ut_r)
+    v1i = dot(g1, ut_i) * sig1_ref[0, :][:, None]   # σ1 · Im(u_half[src1])
+    v2r = dot(g2, ut_r)
+    v2i = dot(g2, ut_i) * sig2_ref[0, :][:, None]   # σ2 · Im(u_half[src2])
+    prod_r = v1r * v2r - v1i * v2i
+    prod_i = v1r * v2i + v1i * v2r
+
+    iu_s = jax.lax.broadcasted_iota(jnp.int32, (idxu_half_max, tile), 0)
+    s = ((dest_ref[0, :][None, :] == iu_s).astype(dtype)
+         * coef_ref[0, :][None, :]).astype(mxu_dtype)
+    y_r_ref[...] += dot(s, prod_r.astype(mxu_dtype))
+    y_i_ref[...] += dot(s, prod_i.astype(mxu_dtype))
+
+
+def y_coef_half(beta, twojmax: int, tile: int = Y_TILE):
+    """Runtime per-entry coefficient for the half-space COO table:
+    ``cg_folded * y_fac * beta[y_jjb]`` — mirror signs s1·s2 are already
+    inside ``cg_folded`` (``SnapIndex.z_half_cg``)."""
+    idx = build_index(twojmax)
+    _, _, _, _, _, cg, jjz = _y_half_coo_tiles(twojmax, tile)
+    betaj = jnp.asarray(idx.y_fac) * beta[..., idx.y_jjb]
+    return jnp.asarray(cg) * betaj[..., jjz]
+
+
+def snap_y_half_pallas(ut_r, ut_i, coef, *, twojmax, tile=Y_TILE,
+                       mxu_dtype=None, interpret=True):
+    """ut_r/ut_i: [idxu_half_max, natoms_pad] half Ulisttot planes (self
+    included); coef: [ntiles, tile] from :func:`y_coef_half`.
+
+    Returns (y_r, y_i): [idxu_half_max, natoms_pad] adjoint half planes —
+    exactly the left rows of :func:`repro.core.bispectrum.compute_ylist`
+    on the weighted support (dropped weight-0 middle-row columns are 0).
+
+    mxu_dtype: dtype of the operands fed to ``jnp.dot`` (default: the
+    plane dtype).  ``jnp.bfloat16`` halves MXU-feed bytes; accumulation
+    stays in the plane dtype via ``preferred_element_type``.
+    """
+    idx = build_index(twojmax)
+    iu, natoms_pad = ut_r.shape
+    assert iu == idx.idxu_half_max and natoms_pad % LANES == 0
+    dtype = ut_r.dtype
+    mxu_dtype = jnp.dtype(mxu_dtype) if mxu_dtype is not None else dtype
+    src1, src2, sig1, sig2, dest, _, _ = _y_half_coo_tiles(twojmax, tile)
+    ntiles = src1.shape[0]
+    assert coef.shape == (ntiles, tile), (coef.shape, (ntiles, tile))
+    coef = coef.astype(dtype)
+
+    kernel = partial(_snap_y_half_kernel, idxu_half_max=idx.idxu_half_max,
+                     tile=tile, dtype=dtype, mxu_dtype=mxu_dtype)
+    grid = (natoms_pad // LANES, ntiles)
+    nh = idx.idxu_half_max
+    coo_spec = pl.BlockSpec((1, tile), lambda i, t: (t, 0))
+    u_spec = pl.BlockSpec((nh, LANES), lambda i, t: (0, i))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[coo_spec, coo_spec, coo_spec, coo_spec, coo_spec,
+                  coo_spec, u_spec, u_spec],
+        out_specs=[u_spec, u_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nh, natoms_pad), dtype),
+            jax.ShapeDtypeStruct((nh, natoms_pad), dtype)],
+        interpret=interpret,
+    )(jnp.asarray(src1), jnp.asarray(src2),
+      jnp.asarray(sig1, dtype), jnp.asarray(sig2, dtype),
+      jnp.asarray(dest), coef, ut_r, ut_i)

@@ -173,9 +173,13 @@ class HloCost:
                    ' get-tuple-element(', ' bitcast(', ' after-all(',
                    ' partition-id(', ' replica-id(')
 
-    def _line_bytes(self, ln: str) -> int:
+    def _line_bytes(self, ln: str, shape_pred=None) -> int:
         """result bytes + operand bytes (HBM traffic estimate for one
-        top-level instruction; fusion interiors never touch HBM)."""
+        top-level instruction; fusion interiors never touch HBM).
+
+        shape_pred: optional ``(dtype_str, dims) -> bool`` filter — only
+        tensors it accepts are counted (used by :meth:`plane_bytes`).
+        """
         if any(op in ln for op in self._SKIP_BYTES):
             return 0
         seg = ln.split('=', 1)
@@ -184,13 +188,14 @@ class HloCost:
         rhs = seg[1]
         total = 0
         rt = _TYPE_RE.search(rhs.split('(', 1)[0])
-        if rt:
+        if rt and (shape_pred is None
+                   or shape_pred(rt.group(1), _dims_list(rt.group(2)))):
             total += _shape_elems(rt.group(2)) * _DTYPE_BYTES[rt.group(1)]
         args = rhs.split('(', 1)
         if len(args) > 1:
             for m in re.finditer(r'%([\w\.\-]+)', args[1].split(')')[0]):
                 sh = self.shapes.get(m.group(1))
-                if sh:
+                if sh and (shape_pred is None or shape_pred(sh[0], sh[1])):
                     total += _shape_elems(
                         ','.join(map(str, sh[1]))) * _DTYPE_BYTES[sh[0]]
         return total
@@ -243,5 +248,68 @@ class HloCost:
                     collectives=coll, collective_bytes=total_coll)
 
 
+    def plane_bytes(self, plane_rows, lane_cols=(128,),
+                    loop_only=False) -> float:
+        """Trip-count-weighted bytes moved through *plane-shaped* tensors:
+        rank-2 results/operands with a leading dim in ``plane_rows`` and a
+        lane dim in ``lane_cols``.
+
+        Rationale: in the interpret-mode lowering of the Pallas SNAP
+        pipeline every kernel-interior temporary appears as a top-level
+        HLO buffer, but on hardware those live in VMEM — the only tensors
+        that actually cross HBM are the inter-stage planes
+        ``[idxu_max | idxu_half_max, natoms_pad]`` (and their per-grid-step
+        block refetches, which the interpreter's while-loop body repeats
+        with the correct trip count).  Counting plane-shaped traffic only
+        therefore measures the pipeline's HBM-relevant bytes-accessed
+        while staying a pure function of the optimized HLO text.
+        Each consumption is counted (a plane read by two dots in one grid
+        step counts twice) — an overestimate applied identically to every
+        layout under comparison.
+
+        loop_only=True restricts to trip-counted loop bodies (multiplier
+        > 1): the grid-revisit traffic — e.g. the Y kernel's per-COO-tile
+        U-plane refetches — with single-pass kernel interiors (whose
+        plane-shaped temporaries are VMEM state, and whose counting is at
+        the mercy of XLA:CPU fusion decisions) excluded entirely.
+        """
+        rows = set(int(r) for r in plane_rows)
+        cols = set(int(c) for c in lane_cols)
+        fusion_bodies = self._fusion_bodies()
+        total = 0.0
+
+        def shape_hit(dt, dims):
+            return (len(dims) == 2 and dims[0] in rows and dims[1] in cols)
+
+        for name, lines in self.blocks.items():
+            k = self.mult.get(name, 0.0)
+            if k == 0.0 or name in fusion_bodies:
+                continue
+            if loop_only and k <= 1.0:
+                continue
+            for ln in lines:
+                total += k * self._line_bytes(ln, shape_pred=shape_hit)
+        return total
+
+
 def analyze_hlo(text: str) -> Dict:
     return HloCost(text).totals()
+
+
+def lowered_text(fn, *args) -> str:
+    """Optimized HLO text of ``jit(fn)(*args)`` (compile on this host)."""
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def pipeline_plane_cost(fn, args, plane_rows, lane_cols=(128,)) -> Dict:
+    """Lower + compile ``fn`` and report the SNAP-pipeline cost tuple:
+    total corrected FLOPs/bytes plus the plane-shaped HBM traffic (all
+    plane consumptions, and loop-body-only grid-revisit traffic — see
+    :meth:`HloCost.plane_bytes`)."""
+    hc = HloCost(lowered_text(fn, *args))
+    out = hc.totals()
+    out['plane_bytes'] = hc.plane_bytes(plane_rows, lane_cols)
+    out['plane_bytes_loop'] = hc.plane_bytes(plane_rows, lane_cols,
+                                             loop_only=True)
+    return out

@@ -213,6 +213,11 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
     host-path meaning (capacity of the rcut sphere); the device build
     auto-scales it to the rcut+skin shell.
 
+    force_kwargs are forwarded to the force implementation; for
+    impl='kernel' this includes the half-plane pipeline knobs
+    (``layout='half'|'full'``, ``y_tile``, ``mxu_dtype`` — see
+    repro.kernels.ops.snap_force_pipeline).
+
     fn_cache: optional dict reused across calls to keep the jitted force /
     segment functions (and their compilations) alive — benchmarks pass the
     same dict to warmup and timed runs.  The cached closures bake in the

@@ -1,0 +1,157 @@
+"""Property tests for the symmetric half-index machinery (idxu_half maps
+and the mirror-folded half-space COO tables) of repro.core.indices.
+
+The j-mirror  u(j, mb, ma) = (-1)^(mb+ma) conj(u(j, j-mb, j-ma))  makes
+rows 2mb > j redundant; these tests pin down the algebra the kernels rely
+on: the mirror is an involution, its signs are consistent (s(x)·s(Mx) = 1,
+fixed points force +1), the compacted layout round-trips, and the folded
+COO contraction is exactly the full contraction on the weighted support.
+"""
+import numpy as np
+import pytest
+
+from repro.core.indices import build_index
+
+TWOJMAX = [2, 3, 5, 8, 14]
+
+
+def _mirror_perm(idx):
+    """The full-space mirror permutation M: (j, mb, ma) -> (j, j-mb, j-ma)."""
+    j, mb, ma = idx.idxu_j, idx.idxu_mb, idx.idxu_ma
+    return idx.idxu_block[j] + (j - mb) * (j + 1) + (j - ma)
+
+
+@pytest.mark.parametrize('twojmax', TWOJMAX)
+def test_mirror_is_involution(twojmax):
+    idx = build_index(twojmax)
+    m = _mirror_perm(idx)
+    np.testing.assert_array_equal(m[m], np.arange(idx.idxu_max))
+    # M swaps the left and mirrored regions; fixed points (even j, center
+    # element) sit in the left region
+    left = 2 * idx.idxu_mb <= idx.idxu_j
+    assert (left | left[m]).all()
+    # off the middle row, both mirror partners resolve to the SAME half
+    # slot; the middle row 2mb == j maps onto itself column-reversed, so
+    # its elements are stored individually (their redundancy is what makes
+    # the dropped weight-0 COO dest entries dead)
+    off_mid = 2 * idx.idxu_mb != idx.idxu_j
+    np.testing.assert_array_equal(idx.full_to_half[off_mid],
+                                  idx.full_to_half[m][off_mid])
+    mid = ~off_mid
+    np.testing.assert_array_equal(idx.idxu_ma[m][mid],
+                                  (idx.idxu_j - idx.idxu_ma)[mid])
+
+
+@pytest.mark.parametrize('twojmax', TWOJMAX)
+def test_mirror_sign_consistency(twojmax):
+    idx = build_index(twojmax)
+    m = _mirror_perm(idx)
+    j, mb, ma = idx.idxu_j, idx.idxu_mb, idx.idxu_ma
+    # sign on mirrored rows is (-1)^(mb+ma); (j-mb)+(j-ma) == mb+ma mod 2,
+    # so applying the mirror twice composes to +1
+    mirrored = 2 * mb > j
+    expect = np.where((mb + ma) % 2 == 0, 1.0, -1.0)
+    np.testing.assert_array_equal(idx.full_to_half_sign[mirrored],
+                                  expect[mirrored])
+    np.testing.assert_array_equal(idx.full_to_half_sign[~mirrored],
+                                  np.ones((~mirrored).sum()))
+    # the abstract mirror sign (-1)^(mb+ma) is parity-preserved by M, so
+    # applying the identity twice composes to +1 (consistency of the fold)
+    sgn = np.where((mb + ma) % 2 == 0, 1.0, -1.0)
+    assert (sgn * sgn[m] == 1.0).all()
+    np.testing.assert_array_equal(sgn, sgn[m])
+    # conjugation applies exactly on the mirrored region
+    np.testing.assert_array_equal(idx.full_to_half_conj, mirrored)
+    # fixed points of M (u = +conj(u) => real): sign +1, no conj
+    fixed = m == np.arange(idx.idxu_max)
+    assert (idx.full_to_half_sign[fixed] == 1.0).all()
+    assert not idx.full_to_half_conj[fixed].any()
+
+
+@pytest.mark.parametrize('twojmax', TWOJMAX)
+def test_half_layout_roundtrip(twojmax):
+    idx = build_index(twojmax)
+    # compacted size: sum over layers of (j//2+1)(j+1)
+    expect = sum((j // 2 + 1) * (j + 1) for j in range(twojmax + 1))
+    assert idx.idxu_half_max == expect
+    # half -> full -> half is the identity; full -> half covers everything
+    np.testing.assert_array_equal(idx.full_to_half[idx.half_to_full],
+                                  np.arange(idx.idxu_half_max))
+    assert set(idx.full_to_half) == set(range(idx.idxu_half_max))
+    # half storage is exactly the left region, layer-contiguous
+    left = np.flatnonzero(2 * idx.idxu_mb <= idx.idxu_j)
+    np.testing.assert_array_equal(np.sort(idx.half_to_full), left)
+    # weights restrict correctly, and every mirrored row has weight 0
+    np.testing.assert_array_equal(idx.dedr_weight_half,
+                                  idx.dedr_weight[idx.half_to_full])
+    assert (idx.dedr_weight[2 * idx.idxu_mb > idx.idxu_j] == 0.0).all()
+
+
+@pytest.mark.parametrize('twojmax', TWOJMAX)
+def test_half_coo_sources_and_dead_dest_dropped(twojmax):
+    idx = build_index(twojmax)
+    # every source/dest lands inside the half space
+    for a in (idx.z_half_src1, idx.z_half_src2, idx.z_half_dest):
+        assert a.min() >= 0 and a.max() < idx.idxu_half_max
+    # no entry scatters into a weight-0 slot (those were dropped), and
+    # exactly the live full-table entries survived
+    assert (idx.dedr_weight_half[idx.z_half_dest] > 0).all()
+    dest_full = idx.idxz_jju[idx.z_coo_dest]
+    dead = ((2 * idx.idxu_mb[dest_full] == idx.idxu_j[dest_full])
+            & (2 * idx.idxu_ma[dest_full] > idx.idxu_j[dest_full]))
+    assert idx.z_half_dest.shape[0] == (~dead).sum()
+    # sig factors are exactly the conjugation pattern of the full sources
+    sig = np.where(idx.full_to_half_conj, -1.0, 1.0)
+    np.testing.assert_array_equal(idx.z_half_sig1,
+                                  sig[idx.z_coo_src1[~dead]])
+    np.testing.assert_array_equal(idx.z_half_sig2,
+                                  sig[idx.z_coo_src2[~dead]])
+    # folded cg = cg * s1 * s2
+    np.testing.assert_allclose(
+        idx.z_half_cg,
+        idx.z_coo_cg[~dead] * idx.full_to_half_sign[idx.z_coo_src1[~dead]]
+        * idx.full_to_half_sign[idx.z_coo_src2[~dead]], rtol=0, atol=0)
+
+
+@pytest.mark.parametrize('twojmax', [2, 4, 8])
+def test_half_coo_contraction_matches_full(twojmax):
+    """On mirror-symmetric complex data (the only data U planes can hold),
+    the folded half-space contraction == the full contraction, entry for
+    entry on the weighted support."""
+    idx = build_index(twojmax)
+    rng = np.random.default_rng(twojmax)
+    # build mirror-symmetric full-space data: free values on canonical
+    # elements (f <= M(f)), the partner fixed by the identity, fixed
+    # points real (their sign is +1 so u = conj(u))
+    m = _mirror_perm(idx)
+    u = (rng.normal(size=idx.idxu_max)
+         + 1j * rng.normal(size=idx.idxu_max))
+    sgn = np.where((idx.idxu_mb + idx.idxu_ma) % 2 == 0, 1.0, -1.0)
+    canon = np.arange(idx.idxu_max) <= m
+    u_full = np.where(canon, u, sgn * np.conj(u[m]))
+    fixed = m == np.arange(idx.idxu_max)
+    u_full[fixed] = u_full[fixed].real
+    # sanity: u_full satisfies the mirror identity
+    np.testing.assert_allclose(u_full, sgn * np.conj(u_full[m]),
+                               atol=1e-12)
+    uh = u_full[idx.half_to_full]
+
+    coef_full = rng.normal(size=idx.idxz_max)   # arbitrary per-jjz factor
+    y_full = np.zeros(idx.idxu_max, complex)
+    np.add.at(y_full, idx.idxz_jju[idx.z_coo_dest],
+              idx.z_coo_cg * coef_full[idx.z_coo_dest]
+              * u_full[idx.z_coo_src1] * u_full[idx.z_coo_src2])
+
+    v1 = uh.real[idx.z_half_src1] + 1j * idx.z_half_sig1 \
+        * uh.imag[idx.z_half_src1]
+    v2 = uh.real[idx.z_half_src2] + 1j * idx.z_half_sig2 \
+        * uh.imag[idx.z_half_src2]
+    y_half = np.zeros(idx.idxu_half_max, complex)
+    np.add.at(y_half, idx.z_half_dest,
+              idx.z_half_cg * coef_full[idx.z_half_jjz] * v1 * v2)
+
+    sup = idx.dedr_weight_half > 0
+    scale = np.abs(y_full).max()
+    np.testing.assert_allclose(y_half[sup],
+                               y_full[idx.half_to_full][sup],
+                               atol=1e-12 * scale)

@@ -14,11 +14,12 @@ from repro.core.snap import (SnapConfig, _pair_geometry,
                              energy_forces_adjoint, energy_forces_autodiff)
 from repro.core.ulist import compute_ulist, compute_ulisttot
 from repro.kernels.ops import (_kernel_layout, energy_forces_kernel,
-                               snap_dedr_kernel, snap_force_pipeline,
-                               snap_ui_kernel, snap_yi_kernel)
+                               half_planes_to_full, snap_dedr_kernel,
+                               snap_force_pipeline, snap_ui_kernel,
+                               snap_yi_kernel)
 from repro.kernels.ref import ref_snap_fused_de, ref_snap_u
 from repro.kernels.snap_fused_de import snap_fused_de_pallas
-from repro.kernels.snap_u import snap_u_pallas
+from repro.kernels.snap_u import snap_u_half_pallas, snap_u_pallas
 
 from conftest import make_cluster
 
@@ -66,6 +67,28 @@ def test_fused_de_kernel_sweep(twojmax, dtype, natoms, nnbor):
                                **TOL[dtype])
 
 
+@pytest.mark.parametrize('twojmax', [2, 4, 8])
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.float64])
+def test_snap_u_half_kernel_sweep(twojmax, dtype):
+    """Half-plane U == the left rows of the full oracle; the mirror
+    expansion of the half planes reproduces the full oracle everywhere."""
+    cfg = SnapConfig(twojmax=twojmax, rcut=3.0)
+    idx = cfg.index
+    d, *_ = _layout(cfg, 9, 6, seed=3 * twojmax + 1, dtype=dtype)
+    hr, hi = snap_u_half_pallas(d, twojmax=twojmax, rcut=cfg.rcut,
+                                interpret=True)
+    rr, ri = ref_snap_u(d, twojmax=twojmax, rcut=cfg.rcut)
+    np.testing.assert_allclose(np.asarray(hr),
+                               np.asarray(rr)[idx.half_to_full],
+                               **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(hi),
+                               np.asarray(ri)[idx.half_to_full],
+                               **TOL[dtype])
+    fr, fi = half_planes_to_full(cfg, hr, hi)
+    np.testing.assert_allclose(np.asarray(fr), np.asarray(rr), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(fi), np.asarray(ri), **TOL[dtype])
+
+
 def _oracle_ulisttot(cfg, disp, mask):
     """fp64 Ulisttot [natoms, idxu_max] from the core reference pipeline."""
     idx = cfg.index
@@ -76,26 +99,35 @@ def _oracle_ulisttot(cfg, disp, mask):
     return compute_ulisttot(u, geom.sfac, ok, idx, cfg.wself)
 
 
+@pytest.mark.parametrize('layout', ['half', 'full'])
 @pytest.mark.parametrize('twojmax', [4, 8])
 @pytest.mark.parametrize('dtype', [jnp.float32, jnp.float64])
-def test_snap_y_kernel_parity(twojmax, dtype):
+def test_snap_y_kernel_parity(twojmax, dtype, layout):
     """Pallas one-hot-matmul Y == bs.compute_ylist on identical Ulisttot.
 
     Acceptance bar: <= 1e-5 relative (f32) / 1e-10 (f64) at twojmax=8.
+    The half layout is compared on the weighted support (dedr_weight > 0):
+    it drops the COO entries scattering into weight-0 positions that no
+    contraction ever reads, so those read back 0 instead of the reference
+    value; the full layout matches everywhere.
     """
     cfg = SnapConfig(twojmax=twojmax, rcut=3.0)
     _, disp, _, mask, _ = make_cluster(natoms=9, nnbor=6, seed=twojmax)
     ut = _oracle_ulisttot(cfg, disp, mask)
     rng = np.random.default_rng(twojmax)
     beta = jnp.asarray(rng.normal(size=cfg.ncoeff))
-    y_ref = bs.compute_ylist(ut, beta, cfg.index)
-    y_k = snap_yi_kernel(cfg, ut, beta, dtype=dtype, interpret=True)
-    scale = max(1.0, float(jnp.abs(y_ref).max()))
+    y_ref = np.asarray(bs.compute_ylist(ut, beta, cfg.index))
+    y_k = np.asarray(snap_yi_kernel(cfg, ut, beta, dtype=dtype,
+                                    interpret=True, layout=layout))
+    if layout == 'half':
+        sup = cfg.index.dedr_weight > 0
+        y_ref, y_k = y_ref[:, sup], y_k[:, sup]
+    scale = max(1.0, float(np.abs(y_ref).max()))
     tol = 1e-5 if dtype == jnp.float32 else 1e-10
-    np.testing.assert_allclose(np.asarray(y_k.real) / scale,
-                               np.asarray(y_ref.real) / scale, atol=tol)
-    np.testing.assert_allclose(np.asarray(y_k.imag) / scale,
-                               np.asarray(y_ref.imag) / scale, atol=tol)
+    np.testing.assert_allclose(y_k.real / scale, y_ref.real / scale,
+                               atol=tol)
+    np.testing.assert_allclose(y_k.imag / scale, y_ref.imag / scale,
+                               atol=tol)
 
 
 def test_snap_y_kernel_tile_sweep():
@@ -130,9 +162,10 @@ def test_kernel_pipeline_matches_autodiff():
                                atol=1e-10 * scale)
 
 
+@pytest.mark.parametrize('layout', ['half', 'full'])
 @pytest.mark.parametrize('twojmax', [4, 8])
-def test_kernel_pipeline_matches_adjoint(twojmax):
-    """End-to-end: Pallas U -> jnp Y -> Pallas fused dE == fp64 adjoint."""
+def test_kernel_pipeline_matches_adjoint(twojmax, layout):
+    """End-to-end zero-relayout pipeline == fp64 adjoint, both layouts."""
     cfg = SnapConfig(twojmax=twojmax, rcut=3.0)
     _, disp, nbr_idx, mask, _ = make_cluster(natoms=12, nnbor=8,
                                              seed=twojmax)
@@ -143,16 +176,82 @@ def test_kernel_pipeline_matches_adjoint(twojmax):
                                             nbr_idx, mask)
     e_k, _, f_k = energy_forces_kernel(cfg, beta, 0.2, dx, dy, dz, nbr_idx,
                                        mask, dtype=jnp.float64,
-                                       interpret=True)
+                                       interpret=True, layout=layout)
     np.testing.assert_allclose(float(e_k), float(e_ref), rtol=1e-11)
     np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_ref),
                                atol=1e-10 * float(jnp.abs(f_ref).max()))
     # fp32 stays within engineering tolerance of the fp64 oracle
     e_32, _, f_32 = energy_forces_kernel(cfg, beta, 0.2, dx, dy, dz,
                                          nbr_idx, mask, dtype=jnp.float32,
-                                         interpret=True)
+                                         interpret=True, layout=layout)
     rel = float(jnp.abs(f_32 - f_ref).max() / jnp.abs(f_ref).max())
     assert rel < 5e-5, rel
+
+
+def test_kernel_pipeline_mxu_bf16():
+    """bf16 MXU-feed policy: Y matmul operands in bfloat16, accumulation
+    in f32 — forces within 1e-2 relative of the fp64 adjoint, energy too
+    (the acceptance bar for the low-precision knob)."""
+    cfg = SnapConfig(twojmax=8, rcut=3.0)
+    _, disp, nbr_idx, mask, _ = make_cluster(natoms=12, nnbor=8, seed=8)
+    rng = np.random.default_rng(1)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff))
+    dx, dy, dz = disp[..., 0], disp[..., 1], disp[..., 2]
+    e_ref, _, f_ref = energy_forces_adjoint(cfg, beta, 0.2, dx, dy, dz,
+                                            nbr_idx, mask)
+    e_b, _, f_b = energy_forces_kernel(cfg, beta, 0.2, dx, dy, dz, nbr_idx,
+                                       mask, dtype=jnp.float32,
+                                       interpret=True,
+                                       mxu_dtype=jnp.bfloat16)
+    rel = float(jnp.abs(f_b - f_ref).max() / jnp.abs(f_ref).max())
+    assert rel < 1e-2, rel
+    assert abs(float(e_b) - float(e_ref)) < 1e-2 * abs(float(e_ref)), \
+        (float(e_b), float(e_ref))
+
+
+@pytest.mark.parametrize('dtype,tol', [(jnp.float32, 1e-5),
+                                       (jnp.float64, 1e-10)])
+def test_kernel_pipeline_2j14_matches_autodiff(dtype, tol):
+    """The paper's 2J=14 problem (configs/snap_2j14): half-plane pipeline
+    forces vs the reverse-mode AD oracle at the acceptance bars.
+
+    Small cluster + a large Y tile keep the interpret-mode grid tractable
+    (the 2J=14 half COO table is ~1.06M entries)."""
+    from repro.configs.snap_2j14 import CONFIG
+    cfg = SnapConfig(twojmax=CONFIG['snap'].twojmax, rcut=3.0)
+    assert cfg.twojmax == 14
+    pos, disp, nbr_idx, mask, shifts = make_cluster(natoms=4, nnbor=3,
+                                                    seed=14)
+    rng = np.random.default_rng(14)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff) * 1e-2)
+    e_g, f_g = energy_forces_autodiff(cfg, beta, 0.1, jnp.asarray(pos),
+                                      nbr_idx, shifts, mask)
+    e_k, _, f_k = snap_force_pipeline(cfg, beta, 0.1, disp[..., 0],
+                                      disp[..., 1], disp[..., 2], nbr_idx,
+                                      mask, dtype=dtype, interpret=True,
+                                      y_tile=16384)
+    scale = float(jnp.abs(f_g).max())
+    rel = float(jnp.abs(f_k - f_g).max()) / scale
+    assert rel < tol, rel
+    np.testing.assert_allclose(float(e_k), float(e_g),
+                               rtol=max(tol, 1e-11))
+
+
+def test_snap_y_kernel_parity_2j14():
+    """Half-plane Y == bs.compute_ylist on the weighted support at 2J=14
+    (the mirror fold must hold on the deepest production index space)."""
+    cfg = SnapConfig(twojmax=14, rcut=3.0)
+    _, disp, _, mask, _ = make_cluster(natoms=4, nnbor=3, seed=7)
+    ut = _oracle_ulisttot(cfg, disp, mask)
+    rng = np.random.default_rng(7)
+    beta = jnp.asarray(rng.normal(size=cfg.ncoeff) * 1e-2)
+    y_ref = np.asarray(bs.compute_ylist(ut, beta, cfg.index))
+    y_k = np.asarray(snap_yi_kernel(cfg, ut, beta, dtype=jnp.float64,
+                                    interpret=True, y_tile=16384))
+    sup = cfg.index.dedr_weight > 0
+    scale = max(1.0, float(np.abs(y_ref).max()))
+    np.testing.assert_allclose(y_k[:, sup] / scale, y_ref[:, sup] / scale,
+                               atol=1e-10)
 
 
 def test_kernel_grid_multiblock():
@@ -184,20 +283,31 @@ def test_kernel_isolated_atoms_no_nan():
 
 @pytest.mark.parametrize('twojmax', [2, 4, 8])
 @pytest.mark.parametrize('dtype', [jnp.float32, jnp.float64])
-def test_fused_de_half_variant_matches_v1(twojmax, dtype):
-    """Beyond-paper half-plane recursion kernel == full-mirror v1 kernel
-    (Y's mirrored half is zero in real use — enforced here)."""
+def test_fused_de_half_matches_v1(twojmax, dtype):
+    """Native half-plane fused-dE kernel (half recursion state AND half Y
+    input planes) == full-mirror v1 kernel fed the full-plane expansion
+    of the same Y (mirrored/weight-0 rows zero, as in real use)."""
     from repro.kernels.snap_fused_de_half import snap_fused_de_half_pallas
     cfg = SnapConfig(twojmax=twojmax, rcut=3.0)
+    idx = cfg.index
     d, *_ = _layout(cfg, 9, 6, seed=twojmax, dtype=dtype)
     rng = np.random.default_rng(twojmax)
-    shape = (cfg.index.idxu_max, d.shape[-1])
-    half = (cfg.index.dedr_weight > 0)[:, None]
-    yr = jnp.asarray(rng.normal(size=shape), dtype) * half
-    yi = jnp.asarray(rng.normal(size=shape), dtype) * half
-    v1 = snap_fused_de_pallas(d, yr, yi, twojmax=twojmax, rcut=cfg.rcut,
-                              interpret=True)
-    v2 = snap_fused_de_half_pallas(d, yr, yi, twojmax=twojmax,
+    h_shape = (idx.idxu_half_max, d.shape[-1])
+    sup = (idx.dedr_weight_half > 0)[:, None]
+    yr_h = jnp.asarray(rng.normal(size=h_shape), dtype) * sup
+    yi_h = jnp.asarray(rng.normal(size=h_shape), dtype) * sup
+    # full-plane expansion: half rows scattered back, mirrored rows zero.
+    # NB separate buffers: jnp.asarray of a f64 numpy array is zero-copy
+    # on CPU, so reusing one scratch array would alias the first operand.
+    full_r = np.zeros((idx.idxu_max, d.shape[-1]))
+    full_r[idx.half_to_full] = np.asarray(yr_h)
+    yr_f = jnp.asarray(full_r, dtype)
+    full_i = np.zeros((idx.idxu_max, d.shape[-1]))
+    full_i[idx.half_to_full] = np.asarray(yi_h)
+    yi_f = jnp.asarray(full_i, dtype)
+    v1 = snap_fused_de_pallas(d, yr_f, yi_f, twojmax=twojmax,
+                              rcut=cfg.rcut, interpret=True)
+    v2 = snap_fused_de_half_pallas(d, yr_h, yi_h, twojmax=twojmax,
                                    rcut=cfg.rcut, interpret=True)
     np.testing.assert_allclose(np.asarray(v2), np.asarray(v1),
                                **TOL[dtype])
