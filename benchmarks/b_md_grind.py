@@ -113,6 +113,41 @@ def run(quick=True, out_dir=None):
     emit('md_grind_device_speedup_over_exact_rebuild', 0.0,
          f'{dev_speedup:.2f}x')
 
+    # resilience overhead: the in-scan health-flag guards (NaN/escape/
+    # drift reductions folded into the chunk carry) and periodic atomic
+    # checkpointing, each vs the unguarded device loop — the guards are
+    # required to cost <= 5% steps/s (CI-gated), checkpointing is
+    # recorded for the ops budget
+    import shutil
+    import tempfile
+    from repro.md.resilience import RecoveryPolicy
+    t_dev = results['loops']['device']['seconds']
+    t_g, cache_g = _time_md(cfg, beta, natoms, n_steps, 'adjoint',
+                            'device', rebuild_every, max_nbors, skin=skin,
+                            policy=RecoveryPolicy(drift_tol=1e3))
+    ckpt_dir = tempfile.mkdtemp(prefix='bench_md_ckpt_')
+    try:
+        t_c, _ = _time_md(cfg, beta, natoms, n_steps, 'adjoint', 'device',
+                          rebuild_every, max_nbors, skin=skin,
+                          policy=RecoveryPolicy(drift_tol=1e3),
+                          checkpoint_dir=ckpt_dir,
+                          checkpoint_every=max(1, n_steps // 2))
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    results['resilience'] = dict(
+        device_guarded=dict(seconds=t_g,
+                            katom_steps_per_s=natoms * n_steps / t_g / 1e3,
+                            jit_traces=cache_g.get('device_trace_count',
+                                                   {}).get('traces')),
+        device_checkpointed=dict(
+            seconds=t_c, katom_steps_per_s=natoms * n_steps / t_c / 1e3),
+        guard_overhead=t_g / t_dev,
+        checkpoint_overhead=t_c / t_dev)
+    emit(f'md_grind_adjoint_deviceguard_2J{twojmax}_N{natoms}',
+         t_g / n_steps, f'{t_g / t_dev:.3f}x of unguarded')
+    emit(f'md_grind_adjoint_devicechkpt_2J{twojmax}_N{natoms}',
+         t_c / n_steps, f'{t_c / t_dev:.3f}x of unguarded')
+
     # atom-shard scaling on the device loop (>= 2 shards when the runtime
     # exposes >= 2 devices; CI forces 2 host devices via XLA_FLAGS)
     n_dev = len(jax.devices())

@@ -31,7 +31,24 @@ def main():
                          'loop (on-device cell list + half-skin trigger)')
     ap.add_argument('--skin', type=float, default=1.0,
                     help='Verlet skin radius for --loop device')
+    ap.add_argument('--resilient', action='store_true',
+                    help='arm the health-flag guards + recovery policy '
+                         '(regrow on overflow, rollback on NaN/drift; '
+                         '--loop device only)')
+    ap.add_argument('--checkpoint', metavar='DIR', default=None,
+                    help='directory for periodic atomic MD checkpoints '
+                         '(--loop device only)')
+    ap.add_argument('--checkpoint-every', type=int, default=10,
+                    help='steps between checkpoints (multiple of '
+                         'log_every keeps restarts bitwise-identical)')
+    ap.add_argument('--restore', action='store_true',
+                    help='resume from the latest checkpoint under '
+                         '--checkpoint instead of a fresh lattice')
     args = ap.parse_args()
+    if (args.resilient or args.checkpoint) and args.loop != 'device':
+        ap.error('--resilient/--checkpoint require --loop device')
+    if args.restore and not args.checkpoint:
+        ap.error('--restore requires --checkpoint DIR')
 
     cfg = SnapConfig(twojmax=args.twojmax, rcut=4.7)
     rng = np.random.default_rng(1)
@@ -43,13 +60,24 @@ def main():
     pos = perturb(pos, 0.02, seed=2)
     state = MDState(pos=pos, vel=init_velocities(len(pos), temp=300.0),
                     box=box)
+    policy = None
+    if args.resilient:
+        from repro.md.resilience import RecoveryPolicy
+        policy = RecoveryPolicy()
+    cache = {}
     state, thermo = run_nve(cfg, beta, 0.0, state, args.steps,
                             impl=args.impl, log_every=5, loop=args.loop,
-                            skin=args.skin)
+                            skin=args.skin, policy=policy,
+                            checkpoint_dir=args.checkpoint,
+                            checkpoint_every=(args.checkpoint_every
+                                              if args.checkpoint else 0),
+                            restore=args.restore, fn_cache=cache)
     print(f'{"step":>6} {"T[K]":>10} {"PE[eV]":>14} {"Etot[eV]":>14}')
     for t in thermo:
         print(f'{t["step"]:>6} {t["T"]:>10.2f} {t["pe"]:>14.6f} '
               f'{t["etot"]:>14.6f}')
+    for ev in cache.get('recovery_events', []):
+        print(f'recovery: step {ev.step} {ev.kind} {ev.detail}')
     drift = abs(thermo[-1]['etot'] - thermo[0]['etot'])
     scale = max(abs(thermo[0]['etot']), 1.0)
     print(f'NVE energy drift: {drift:.3e} eV ({drift / scale:.2e} relative)')

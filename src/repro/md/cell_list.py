@@ -42,7 +42,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .neighbor import NeighborOverflowError, dedup_stencil
+from .neighbor import (NeighborOverflowError, dedup_stencil,
+                       suggest_capacity)
+
+# Health-flag lattice layout (int32 vector carried through the device
+# loop; slots 0-1 are running max *counts* from the neighbor build, slots
+# 2-5 are sticky 0/1 indicators set by the in-scan guards of
+# md/integrate.py).  The host reads the whole vector once per chunk —
+# the same readback that already returns the logging rows, so the guards
+# add no extra syncs.
+FLAG_NBR_MAX = 0      # max neighbors seen by any atom (vs grid.max_nbors)
+FLAG_CELL_MAX = 1     # max cell occupancy seen (vs grid.cell_cap)
+FLAG_NAN_FORCE = 2    # non-finite value in the force array
+FLAG_NAN_STATE = 3    # non-finite value in positions or velocities
+FLAG_ESCAPE = 4       # an atom left the box by > escape_factor box lengths
+FLAG_DRIFT = 5        # |Etot - Eref| exceeded the watchdog bound
+N_FLAGS = 6
 
 
 class CellOverflowError(RuntimeError):
@@ -51,10 +66,12 @@ class CellOverflowError(RuntimeError):
     def __init__(self, max_count, cell_cap):
         self.max_count = int(max_count)
         self.cell_cap = int(cell_cap)
+        self.suggested = suggest_capacity(self.max_count)
         super().__init__(
             f'cell list overflow: a cell holds {self.max_count} atoms but '
-            f'cell_cap={self.cell_cap}; rerun with cell_cap >= '
-            f'{self.max_count}')
+            f'capacity cell_cap={self.cell_cap}; retry with '
+            f'cell_cap={self.suggested} '
+            f'(observed max {self.max_count} + headroom)')
 
 
 @dataclass(frozen=True)
@@ -185,8 +202,16 @@ def device_neighbors(pos, box, grid: CellGrid):
 
 
 def check_flags(flags, grid: CellGrid):
-    """Host-boundary overflow check, mirroring the host builders' raises."""
-    nbr_max, cell_max = (int(x) for x in np.asarray(flags))
+    """Host-boundary overflow check, mirroring the host builders' raises.
+
+    Accepts either the bare ``[2]`` build flags or the full ``[N_FLAGS]``
+    health vector (only the capacity slots are checked here; the sticky
+    health slots are the recovery layer's business — see
+    :mod:`repro.md.resilience`).
+    """
+    f = np.asarray(flags)
+    nbr_max = int(f[FLAG_NBR_MAX])
+    cell_max = int(f[FLAG_CELL_MAX])
     if cell_max > grid.cell_cap:
         raise CellOverflowError(cell_max, grid.cell_cap)
     if nbr_max > grid.max_nbors:

@@ -1,0 +1,94 @@
+"""Deterministic fault injection for the resilient MD device loop.
+
+The device driver calls its ``fault_hook`` once per chunk boundary,
+after snapshotting the last-good carry but *before* launching the chunk
+— so an injected fault corrupts exactly one chunk attempt and the
+rollback target stays clean.  That makes every recovery path exercisable
+in CI with no physics contrivances:
+
+- ``nan_force`` / ``nan_vel``: poison one element of the carried force /
+  velocity array; the in-scan finite guards latch the sticky flag and
+  the driver rolls back + retries (the retry sees the clean snapshot).
+- ``overflow_nbr`` / ``overflow_cell``: bump the corresponding health
+  flag past capacity, simulating a density fluctuation the static lists
+  cannot hold; the driver regrows capacities, re-jits once, and rolls
+  back.  Forces are untouched, so the recovered trajectory must match
+  an oversized-capacity reference run.
+- ``crash``: raise :class:`SimulatedCrash` at the boundary, modelling a
+  host death between chunks; the test harness restores from the last
+  checkpoint and verifies bitwise continuation.
+
+Faults fire at the first chunk boundary whose absolute step is >= their
+``step`` (boundaries are quantized by the logging chunk), exactly
+``once`` unless configured persistent — persistent faults are how the
+bounded-retry exhaustion path (typed errors) is tested.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from .cell_list import (FLAG_CELL_MAX, FLAG_NBR_MAX, CellGrid)
+
+
+class SimulatedCrash(RuntimeError):
+    """A deliberately induced host death at a chunk boundary."""
+
+    def __init__(self, step: int):
+        self.step = int(step)
+        super().__init__(f'simulated host crash at step {self.step}')
+
+
+KINDS = ('nan_force', 'nan_vel', 'overflow_nbr', 'overflow_cell', 'crash')
+
+
+@dataclass
+class Fault:
+    step: int            # fire at the first chunk boundary >= this step
+    kind: str            # one of KINDS
+    persistent: bool = False   # re-fire at every boundary once armed
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f'unknown fault kind {self.kind!r}; '
+                             f'choose from {KINDS}')
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic chunk-boundary fault plan (a valid ``fault_hook``).
+
+    Records every firing in ``fired`` (step, kind) so tests can assert
+    the plan actually executed.
+    """
+    faults: List[Fault]
+    fired: List[Dict] = field(default_factory=list)
+
+    def __call__(self, step: int, carry: Dict, grid: CellGrid) -> Dict:
+        carry = dict(carry)
+        for fault in self.faults:
+            if step < fault.step:
+                continue
+            if not fault.persistent and any(
+                    f['kind'] == fault.kind and f['fault_step'] == fault.step
+                    for f in self.fired):
+                continue
+            self.fired.append(dict(step=step, fault_step=fault.step,
+                                   kind=fault.kind))
+            if fault.kind == 'crash':
+                raise SimulatedCrash(step)
+            if fault.kind == 'nan_force':
+                carry['f'] = jnp.asarray(carry['f']).at[0, 0].set(jnp.nan)
+            elif fault.kind == 'nan_vel':
+                carry['vel'] = jnp.asarray(carry['vel']).at[0, 0].set(
+                    jnp.nan)
+            elif fault.kind == 'overflow_nbr':
+                carry['flags'] = jnp.asarray(carry['flags']).at[
+                    FLAG_NBR_MAX].set(grid.max_nbors + 3)
+            elif fault.kind == 'overflow_cell':
+                carry['flags'] = jnp.asarray(carry['flags']).at[
+                    FLAG_CELL_MAX].set(grid.cell_cap + 2)
+        return carry

@@ -33,8 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.snap import SnapConfig, energy_forces
-from .cell_list import (auto_cell_cap, check_flags, device_neighbors,
-                        jitted_build, make_grid)
+from .cell_list import (FLAG_DRIFT, FLAG_ESCAPE, FLAG_NAN_FORCE,
+                        FLAG_NAN_STATE, N_FLAGS, auto_cell_cap,
+                        check_flags, device_neighbors, jitted_build,
+                        make_grid)
 from .neighbor import brute_neighbors
 
 KB = 8.617333262e-5      # eV/K
@@ -106,7 +108,7 @@ def make_segment_fn(cfg: SnapConfig, beta, beta0, dt, mass,
 
 def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
                          impl='adjoint', n_sub: int = 10, force_fn=None,
-                         trace_counter=None, **kw):
+                         trace_counter=None, policy=None, **kw):
     """One jitted scan over ``n_sub`` steps with the rebuild folded in.
 
     Carry = (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags), all on
@@ -116,8 +118,18 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
     otherwise the carried topology is provably still a superset of the
     exact rcut pair set.  The force pipeline then sees a per-step hard cut
     ``mask & (r^2 < rcut^2)``, so forces are identical to a
-    rebuild-every-step reference.  ``flags`` accumulates the running maxima
-    of neighbor/cell occupancy for the host-boundary overflow check.
+    rebuild-every-step reference.
+
+    ``flags`` is the ``[N_FLAGS]`` int32 health lattice: slots 0-1 carry
+    the running maxima of neighbor/cell occupancy from the in-scan
+    rebuilds; with a :class:`~repro.md.resilience.RecoveryPolicy` the
+    step body additionally latches sticky non-finite-force/state,
+    atom-escape, and energy-drift indicators (slots 2-5).  Everything is
+    on-device reductions folded into the scan carry — the host sees the
+    vector in the same per-chunk readback as the thermo rows, so the
+    guards add no synchronization points.  ``e_ref`` is the watchdog's
+    reference total energy (traced scalar; unused when the policy has no
+    ``drift_tol``).
 
     force_fn: optional override for the force evaluation, e.g. an
     atom-sharded ``shard_map`` pipeline from
@@ -128,6 +140,9 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
     half_skin2 = (0.5 * grid.skin) ** 2
     rc2 = cfg.rcut * cfg.rcut
     counter = trace_counter if trace_counter is not None else {}
+    guards = policy is not None
+    escape_factor = getattr(policy, 'escape_factor', None)
+    drift_tol = getattr(policy, 'drift_tol', None)
 
     def eval_force(disp, nbr_idx, mask_t):
         if force_fn is not None:
@@ -140,7 +155,8 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
         return e, f
 
     @jax.jit
-    def chunk(pos, vel, f, box, nbr_idx, shifts, mask, pos_ref, flags):
+    def chunk(pos, vel, f, box, nbr_idx, shifts, mask, pos_ref, flags,
+              e_ref):
         counter['traces'] = counter.get('traces', 0) + 1
 
         def step(carry, _):
@@ -154,7 +170,7 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
 
             def rebuild(_):
                 ni, ms, sh, fl = device_neighbors(pos, box, grid)
-                return ni, sh, ms, pos, jnp.maximum(flags, fl), jnp.int32(1)
+                return ni, sh, ms, pos, flags.at[:2].max(fl), jnp.int32(1)
 
             def keep(_):
                 return nbr_idx, shifts, mask, pos_ref, flags, jnp.int32(0)
@@ -167,6 +183,22 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
             e, f_new = eval_force(disp, nbr_idx, mask_t)
             vel = vel + (0.5 * dt * acc_scale) * f_new
             ke = (0.5 * mass / ACC_CONV) * jnp.sum(vel * vel)
+            if guards:
+                # sticky health lattice: cheap O(N) reductions vs the
+                # O(N*K*ncoeff) force pipeline, merged into the carried
+                # running-max vector (no extra host syncs)
+                bad_f = ~jnp.all(jnp.isfinite(f_new))
+                bad_s = ~(jnp.all(jnp.isfinite(pos))
+                          & jnp.all(jnp.isfinite(vel)))
+                esc = jnp.max(jnp.abs(pos / box - 0.5)) > escape_factor
+                health = [jnp.int32(0)] * N_FLAGS
+                health[FLAG_NAN_FORCE] = bad_f.astype(jnp.int32)
+                health[FLAG_NAN_STATE] = bad_s.astype(jnp.int32)
+                health[FLAG_ESCAPE] = esc.astype(jnp.int32)
+                if drift_tol is not None:
+                    drifted = jnp.abs((e + ke) - e_ref) > drift_tol
+                    health[FLAG_DRIFT] = drifted.astype(jnp.int32)
+                flags = jnp.maximum(flags, jnp.stack(health))
             carry = (pos, vel, f_new, nbr_idx, shifts, mask, pos_ref, flags)
             return carry, (e, ke, rebuilt)
 
@@ -192,7 +224,9 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
             max_nbors: int = 40, log_every: int = 10,
             loop: str = 'scan', force_kwargs: Dict | None = None,
             fn_cache: Dict | None = None, skin: float = 1.0,
-            cell_cap: int | None = None, shards: int = 1):
+            cell_cap: int | None = None, shards: int = 1,
+            policy=None, checkpoint_dir=None, checkpoint_every: int = 0,
+            restore: bool = False, fault_hook=None):
     """NVE loop; returns (state, list of thermo dicts).
 
     loop='device' folds the neighbor rebuild into the jitted step scan (a
@@ -212,6 +246,19 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
     atom shards; natoms must divide by shards).  max_nbors keeps its
     host-path meaning (capacity of the rcut sphere); the device build
     auto-scales it to the rcut+skin shell.
+
+    Resilience (loop='device' only — see DESIGN.md "Failure model"):
+    a :class:`repro.md.resilience.RecoveryPolicy` arms the in-scan health
+    guards and turns capacity overflows into regrow+re-jit+rollback and
+    numeric blow-ups into rollback+dt-halving retries (bounded, typed
+    errors past the budget); without a policy the first overflow raises
+    at the chunk boundary exactly as before.  checkpoint_dir +
+    checkpoint_every snapshot the full device carry atomically every >=
+    checkpoint_every committed steps; restore=True resumes from the
+    latest snapshot under checkpoint_dir (bitwise-identical continuation
+    when chunk boundaries align, i.e. checkpoint_every is a multiple of
+    log_every).  fault_hook (see repro.md.fault_inject) is called at
+    every chunk boundary to inject deterministic faults for testing.
 
     force_kwargs are forwarded to the force implementation; for
     impl='kernel' this includes the half-plane pipeline knobs
@@ -233,10 +280,17 @@ def run_nve(cfg: SnapConfig, beta, beta0, state: MDState, n_steps: int,
             raise ValueError(
                 'fn_cache was built for different physics parameters '
                 '(cfg/beta/dt/mass/impl/...); pass a fresh dict')
+    if loop != 'device' and (policy is not None or checkpoint_dir
+                             or restore or fault_hook):
+        raise ValueError(
+            'policy/checkpoint/restore/fault_hook are device-loop '
+            "features; use loop='device'")
     if loop == 'device':
         return _run_nve_device(cfg, beta, beta0, state, n_steps, dt, mass,
                                impl, max_nbors, log_every, force_kwargs,
-                               fn_cache, skin, cell_cap, shards)
+                               fn_cache, skin, cell_cap, shards, policy,
+                               checkpoint_dir, checkpoint_every, restore,
+                               fault_hook)
     if loop == 'scan':
         return _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass,
                              impl, rebuild_every, max_nbors, log_every,
@@ -301,96 +355,248 @@ def _run_nve_scan(cfg, beta, beta0, state, n_steps, dt, mass, impl,
     return state, thermo
 
 
-def _run_nve_device(cfg, beta, beta0, state, n_steps, dt, mass, impl,
-                    max_nbors, log_every, force_kwargs, fn_cache, skin,
-                    cell_cap, shards):
-    """Fully on-device driver: rebuilds inside the jitted chunk scan.
-
-    The host's role shrinks to (a) pulling stacked (PE, KE) logging rows
-    and (b) checking the overflow flags — both once per chunk (= logging
-    boundary).  Positions, velocities, forces, topology, and the rebuild
-    decision never leave the device.
-    """
-    kw = force_kwargs or {}
-    cache = fn_cache if fn_cache is not None else {}
-    n_atoms = len(state.pos)
-    box = np.asarray(state.box, np.float64)
-    rb = cfg.rcut + skin
-    # max_nbors sizes the rcut sphere (host-path contract); scale the
-    # padded width to the rcut+skin shell by the volume ratio
-    k_build = int(np.ceil(max_nbors * (rb / cfg.rcut) ** 3 / 4.0)) * 4
-    nbins = tuple(int(max(1, np.floor(b / rb))) for b in box)
-    grid = cache.get('device_grid')
-    if grid is None:
-        cap = cell_cap or auto_cell_cap(state.pos, box, rb)
-        grid = cache['device_grid'] = make_grid(box, cfg.rcut, skin, cap,
-                                                k_build)
-    elif (grid.nbins != nbins or grid.max_nbors != k_build
-          or grid.rcut != cfg.rcut or grid.skin != skin
-          or (cell_cap is not None and grid.cell_cap != cell_cap)):
-        # the grid fingerprint covers what the run_nve fingerprint cannot:
-        # box geometry and list capacities (an auto-sized cell_cap may vary
-        # with positions; capacity violations are still caught by flags)
-        raise ValueError(
-            'fn_cache device grid was built for a different '
-            'box/max_nbors/cell_cap; pass a fresh dict')
-    build = jitted_build(grid)
-
-    force_fn = None
-    if shards > 1:
-        if n_atoms % shards:
-            raise ValueError(
-                f'natoms={n_atoms} must divide by shards={shards}')
-        force_fn = cache.get('device_sharded_force')
-        if force_fn is None:
-            from repro.kernels.ops import make_sharded_force_fn
-            from repro.launch.sharding import make_atom_mesh
-            force_fn = make_sharded_force_fn(
-                cfg, beta, beta0, make_atom_mesh(shards), impl=impl, **kw)
-            cache['device_sharded_force'] = force_fn
-
-    pos = jnp.asarray(state.pos)
-    vel = jnp.asarray(state.vel)
-    boxj = jnp.asarray(box)
-    nbr_idx, mask, shifts, flags = build(pos, boxj)
-    check_flags(flags, grid)
-    # seed the force carry once at step 0 (exact rcut cut, like every step);
-    # jitted — an eager adjoint pipeline here would dominate short runs
+def _seed_force(cache, cfg, beta, beta0, impl, kw, force_fn, pos,
+                nbr_idx, shifts, mask):
+    """Force + energy at the carried positions (exact rcut cut), jitted —
+    used at step 0 and after capacity regrows (same positions, wider
+    topology)."""
     disp = pos[nbr_idx] + shifts - pos[:, None, :]
     mask0 = mask & (jnp.sum(disp * disp, -1) < cfg.rcut * cfg.rcut)
     if force_fn is not None:
-        _, _, f = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
+        e, _, f = force_fn(disp[..., 0], disp[..., 1], disp[..., 2],
                            nbr_idx, mask0)
     else:
         if 'force' not in cache:
             cache['force'] = make_force_fn(cfg, beta, beta0, impl, **kw)
-        _, f = cache['force'](disp[..., 0], disp[..., 1], disp[..., 2],
+        e, f = cache['force'](disp[..., 0], disp[..., 1], disp[..., 2],
                               nbr_idx, mask0)
-    pos_ref = pos
-    chunks = cache.setdefault('device_chunks', {})   # n_sub -> jitted chunk
+    return e, f
+
+
+def _full_flags(build_flags):
+    """Lift the [2] build flags into the [N_FLAGS] health lattice."""
+    return jnp.zeros(N_FLAGS, jnp.int32).at[:2].set(
+        jnp.asarray(build_flags, jnp.int32))
+
+
+def _run_nve_device(cfg, beta, beta0, state, n_steps, dt, mass, impl,
+                    max_nbors, log_every, force_kwargs, fn_cache, skin,
+                    cell_cap, shards, policy=None, checkpoint_dir=None,
+                    checkpoint_every=0, restore=False, fault_hook=None):
+    """Fully on-device driver: rebuilds inside the jitted chunk scan.
+
+    The host's role shrinks to (a) pulling stacked (PE, KE) logging rows
+    and (b) triaging the health-flag lattice — both once per chunk
+    (= logging boundary).  Positions, velocities, forces, topology, and
+    the rebuild decision never leave the device.
+
+    With a RecoveryPolicy the flag triage becomes recovery instead of a
+    raise: capacity overflows regrow the grid (one re-jit per regrow)
+    and roll back to the last good chunk; non-finite/escape/drift flags
+    roll back and retry, halving dt after ``retries_before_dt_halve``
+    plain retries — all bounded, with typed errors past the budget.
+    Because a chunk's outputs are only *committed* to the carry after a
+    clean health check, a flagged chunk never contaminates the
+    trajectory: rollback is simply "keep the previous carry".
+    """
+    from .resilience import (HealthReport, RecoveryEvent,
+                             RecoveryExhaustedError, load_md_checkpoint,
+                             regrow_grid, save_md_checkpoint)
+    kw = force_kwargs or {}
+    cache = fn_cache if fn_cache is not None else {}
+    n_atoms = len(state.pos)
+    events = cache.setdefault('recovery_events', [])
+    rb = cfg.rcut + skin
+    # max_nbors sizes the rcut sphere (host-path contract); scale the
+    # padded width to the rcut+skin shell by the volume ratio
+    k_build = int(np.ceil(max_nbors * (rb / cfg.rcut) ** 3 / 4.0)) * 4
+
+    carry = None
+    e_ref = 0.0
+    dt_cur = float(dt)
+    if restore:
+        if not checkpoint_dir:
+            raise ValueError('restore=True requires checkpoint_dir')
+        carry_np, box, grid, manifest = load_md_checkpoint(checkpoint_dir)
+        box = np.asarray(box, np.float64)
+        if carry_np['pos'].shape[0] != n_atoms:
+            raise ValueError(
+                f"checkpoint holds {carry_np['pos'].shape[0]} atoms but "
+                f'state has {n_atoms}')
+        carry = {k: jnp.asarray(v) for k, v in carry_np.items()}
+        state.step = int(manifest['step'])
+        state.box = box
+        e_ref = float(manifest['extra'].get('e_ref', 0.0))
+        # dt is part of the continuation contract: a resilience dt-halving
+        # before the snapshot must survive the restart
+        dt_cur = float(manifest['extra'].get('dt', dt))
+        cache['device_grid'] = grid
+    else:
+        box = np.asarray(state.box, np.float64)
+        nbins = tuple(int(max(1, np.floor(b / rb))) for b in box)
+        grid = cache.get('device_grid')
+        if grid is None:
+            cap = cell_cap or auto_cell_cap(state.pos, box, rb)
+            grid = cache['device_grid'] = make_grid(box, cfg.rcut, skin,
+                                                    cap, k_build)
+        elif (grid.nbins != nbins or grid.max_nbors < k_build
+              or grid.rcut != cfg.rcut or grid.skin != skin
+              or (cell_cap is not None and grid.cell_cap < cell_cap)):
+            # the grid fingerprint covers what the run_nve fingerprint
+            # cannot: box geometry and list capacities.  Capacities may
+            # legitimately *exceed* the request — a previous run under
+            # this cache may have regrown them — but never undershoot.
+            raise ValueError(
+                'fn_cache device grid was built for a different '
+                'box/max_nbors/cell_cap; pass a fresh dict')
+    boxj = jnp.asarray(box)
+
+    def sharded_force():
+        if shards <= 1:
+            return None
+        if n_atoms % shards:
+            raise ValueError(
+                f'natoms={n_atoms} must divide by shards={shards}')
+        fn = cache.get('device_sharded_force')
+        if fn is None:
+            from repro.kernels.ops import make_sharded_force_fn
+            from repro.launch.sharding import make_atom_mesh
+            fn = make_sharded_force_fn(
+                cfg, beta, beta0, make_atom_mesh(shards), impl=impl, **kw)
+            cache['device_sharded_force'] = fn
+        return fn
+
+    force_fn = sharded_force()
+    max_regrows = policy.max_regrows if policy is not None else 0
+    regrows = 0
+
+    if carry is None:
+        pos = jnp.asarray(state.pos)
+        vel = jnp.asarray(state.vel)
+        while True:   # seed build, with bounded regrow under a policy
+            nbr_idx, mask, shifts, fl = jitted_build(grid)(pos, boxj)
+            report = HealthReport.from_flags(fl, grid)
+            if not report.overflow:
+                break
+            if policy is None:
+                check_flags(fl, grid)   # raises the legacy typed error
+            if regrows >= max_regrows:
+                raise RecoveryExhaustedError(
+                    'initial neighbor build still overflows after '
+                    'regrowing', dict(step=state.step,
+                                      issues=report.issues(),
+                                      regrows=regrows))
+            new_grid = regrow_grid(grid, report, policy)
+            events.append(RecoveryEvent(
+                state.step, 'regrow',
+                dict(where='seed_build', issues=report.issues(),
+                     cell_cap=(grid.cell_cap, new_grid.cell_cap),
+                     max_nbors=(grid.max_nbors, new_grid.max_nbors))))
+            grid = cache['device_grid'] = new_grid
+            regrows += 1
+        # seed the force carry once at step 0 (exact rcut cut, like every
+        # step); jitted — an eager adjoint pipeline here would dominate
+        # short runs
+        e0, f = _seed_force(cache, cfg, beta, beta0, impl, kw, force_fn,
+                            pos, nbr_idx, shifts, mask)
+        ke0 = 0.5 * (mass / ACC_CONV) * float(jnp.sum(vel * vel))
+        e_ref = float(e0) + ke0
+        carry = dict(pos=pos, vel=vel, f=f, nbr_idx=nbr_idx,
+                     shifts=shifts, mask=mask, pos_ref=pos,
+                     flags=_full_flags(fl))
+
+    chunks = cache.setdefault('device_chunks', {})
     counter = cache.setdefault('device_trace_count', {})
     thermo = []
     rebuilds = 0
     it = 0
+    numeric_retries = 0
+    steps_since_ckpt = 0
     chunk_len = max(1, min(log_every, n_steps))
     while it < n_steps:
         n_sub = min(chunk_len, n_steps - it)
-        if n_sub not in chunks:
-            chunks[n_sub] = make_device_chunk_fn(
-                cfg, beta, beta0, dt, mass, grid, impl, n_sub,
-                force_fn=force_fn, trace_counter=counter, **kw)
+        abs_step = state.step + it
+        # chunk fns are keyed by every static they bake in: length,
+        # grid capacities (regrows change array shapes), and dt
+        # (resilience may halve it) — at most one trace per key
+        key = (n_sub, grid.cell_cap, grid.max_nbors, dt_cur)
+        if key not in chunks:
+            chunks[key] = make_device_chunk_fn(
+                cfg, beta, beta0, dt_cur, mass, grid, impl, n_sub,
+                force_fn=force_fn, trace_counter=counter, policy=policy,
+                **kw)
+        attempt = carry
+        if fault_hook is not None:
+            attempt = fault_hook(abs_step, carry, grid)
         (pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags, pe, ke,
-         nreb) = chunks[n_sub](pos, vel, f, boxj, nbr_idx, shifts, mask,
-                               pos_ref, flags)
-        # host boundary: overflow flags + logging rows, nothing else
-        check_flags(flags, grid)
+         nreb) = chunks[key](attempt['pos'], attempt['vel'], attempt['f'],
+                             boxj, attempt['nbr_idx'], attempt['shifts'],
+                             attempt['mask'], attempt['pos_ref'],
+                             attempt['flags'], jnp.float64(e_ref))
+        # host boundary: health triage + logging rows, nothing else
+        if policy is None:
+            check_flags(flags, grid)
+        else:
+            report = HealthReport.from_flags(flags, grid)
+            if report.overflow:
+                if regrows >= max_regrows:
+                    raise RecoveryExhaustedError(
+                        'capacity overflows persisted past the regrow '
+                        'budget', dict(step=abs_step,
+                                       issues=report.issues(),
+                                       regrows=regrows))
+                new_grid = regrow_grid(grid, report, policy)
+                events.append(RecoveryEvent(
+                    abs_step, 'regrow',
+                    dict(issues=report.issues(),
+                         cell_cap=(grid.cell_cap, new_grid.cell_cap),
+                         max_nbors=(grid.max_nbors, new_grid.max_nbors))))
+                grid = cache['device_grid'] = new_grid
+                regrows += 1
+                # roll back to the last good chunk: rebuild the topology
+                # at the regrown capacities from the committed positions
+                # (the force carry is still valid — same positions)
+                ni, ms, sh, fl = jitted_build(grid)(carry['pos'], boxj)
+                carry = dict(carry, nbr_idx=ni, mask=ms, shifts=sh,
+                             pos_ref=carry['pos'],
+                             flags=_full_flags(fl))
+                continue
+            if report.numeric:
+                if numeric_retries >= policy.max_numeric_retries:
+                    raise report.numeric_error(
+                        dict(step=abs_step, issues=report.issues(),
+                             retries=numeric_retries, dt=dt_cur))
+                events.append(RecoveryEvent(
+                    abs_step, 'rollback',
+                    dict(issues=report.issues(),
+                         retries=numeric_retries)))
+                if numeric_retries >= policy.retries_before_dt_halve:
+                    dt_cur *= 0.5
+                    events.append(RecoveryEvent(abs_step, 'dt_halve',
+                                                dict(dt=dt_cur)))
+                numeric_retries += 1
+                continue   # carry is still the last good chunk
+        # clean chunk: commit to the carry and the thermo log
+        carry = dict(pos=pos, vel=vel, f=f, nbr_idx=nbr_idx,
+                     shifts=shifts, mask=mask, pos_ref=pos_ref,
+                     flags=flags)
+        numeric_retries = 0
         rebuilds += int(nreb)
         _log_rows(thermo, np.asarray(pe), np.asarray(ke), it, state.step,
                   n_atoms, n_steps, log_every)
         it += n_sub
+        steps_since_ckpt += n_sub
+        if (checkpoint_dir and checkpoint_every
+                and steps_since_ckpt >= checkpoint_every):
+            path = save_md_checkpoint(
+                checkpoint_dir, state.step + it, carry, box, grid,
+                extra=dict(dt=dt_cur, e_ref=e_ref, n_atoms=n_atoms))
+            events.append(RecoveryEvent(state.step + it, 'checkpoint',
+                                        dict(path=str(path))))
+            steps_since_ckpt = 0
     cache['device_rebuilds'] = rebuilds
-    state.pos = np.asarray(pos)
-    state.vel = np.asarray(vel)
+    state.pos = np.asarray(carry['pos'])
+    state.vel = np.asarray(carry['vel'])
     state.step += n_steps
     return state, thermo
 

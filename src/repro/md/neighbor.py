@@ -20,6 +20,15 @@ from __future__ import annotations
 import numpy as np
 
 
+def suggest_capacity(observed, headroom: float = 1.3, pad: int = 4) -> int:
+    """Regrown static capacity for an observed max count: ``headroom``
+    multiplicative margin + ``pad`` slots, rounded up to a multiple of 4
+    (so regrown list widths stay layout-friendly and a run that overflows
+    once does not overflow again on the next density fluctuation)."""
+    raw = int(np.ceil(int(observed) * float(headroom))) + int(pad)
+    return -(-raw // 4) * 4
+
+
 class NeighborOverflowError(RuntimeError):
     """An atom has more neighbors within rcut than the padded list holds.
 
@@ -31,10 +40,13 @@ class NeighborOverflowError(RuntimeError):
     def __init__(self, max_count, max_nbors):
         self.max_count = int(max_count)
         self.max_nbors = int(max_nbors)
+        self.suggested = suggest_capacity(self.max_count)
         super().__init__(
             f'neighbor list overflow: an atom has {self.max_count} '
-            f'neighbors within rcut but max_nbors={self.max_nbors}; '
-            f'rerun with max_nbors >= {self.max_count}')
+            f'neighbors within the build cutoff but capacity '
+            f'max_nbors={self.max_nbors}; retry with '
+            f'max_nbors={self.suggested} '
+            f'(observed max {self.max_count} + headroom)')
 
 
 def _min_image(d, box):

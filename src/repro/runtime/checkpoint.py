@@ -15,8 +15,14 @@ Design (tensorstore-free, works on any POSIX FS):
   synchronously (cheap) and does the file I/O on a background thread,
   overlapping with the next training steps — the standard
   checkpoint-stall mitigation at scale.
-- Atomicity: writes go to ``<dir>.tmp`` and are renamed into place, so a
-  failure mid-save never corrupts the latest checkpoint (restart safety).
+- Atomicity: writes go to ``<dir>.tmp`` and are renamed into place.  A
+  plain ``os.rename`` onto an existing directory fails on POSIX
+  (ENOTEMPTY), and delete-then-rename leaves a window with *no* complete
+  checkpoint on disk — so re-saving an existing step uses a
+  swap-then-delete: the old dir is renamed to ``<dir>.old``, the tmp dir
+  renamed into place, then the old copy removed.  At every instant at
+  least one complete copy (tmp, old, or final) exists, so a crash at any
+  point during a re-save never corrupts the latest checkpoint.
 """
 
 from __future__ import annotations
@@ -60,9 +66,17 @@ def save(ckpt_dir, tree, step: int, extra: Optional[Dict] = None):
             dict(name=name, file=fname, shape=list(arr.shape),
                  dtype=str(arr.dtype)))
     (tmp / 'manifest.json').write_text(json.dumps(manifest))
+    old = ckpt_dir.parent / (ckpt_dir.name + '.old')
+    if old.exists():                      # stale leftover from a crash
+        shutil.rmtree(old)
     if ckpt_dir.exists():
-        shutil.rmtree(ckpt_dir)
+        # swap-then-delete: rename-into-place would fail (POSIX rename
+        # onto a non-empty dir) and rmtree-then-rename would leave a
+        # window with no complete checkpoint on disk
+        os.rename(ckpt_dir, old)
     os.rename(tmp, ckpt_dir)
+    if old.exists():
+        shutil.rmtree(old)
 
 
 class AsyncCheckpointer:
@@ -128,13 +142,38 @@ def restore(ckpt_dir, target_tree, shardings=None):
                                         else treedef, out)
 
 
+def restore_named(ckpt_dir) -> tuple:
+    """Load a checkpoint purely from its manifest: ``(leaves, manifest)``
+    with ``leaves`` a dict of leaf-name -> numpy array.
+
+    Unlike :func:`restore` this needs no target tree — the manifest's
+    recorded names/shapes/dtypes are the contract — so a restart process
+    that has not yet built its state (e.g. an MD restore deciding grid
+    capacities from the checkpoint itself) can bootstrap from disk alone.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    manifest = json.loads((ckpt_dir / 'manifest.json').read_text())
+    leaves = {}
+    for meta in manifest['leaves']:
+        arr = np.load(ckpt_dir / meta['file'])
+        if list(arr.shape) != list(meta['shape']):
+            raise ValueError(
+                f'leaf {meta["name"]}: file shape {arr.shape} != manifest '
+                f'{meta["shape"]} — corrupt checkpoint')
+        leaves[meta['name']] = arr
+    return leaves, manifest
+
+
 def latest_step(root) -> Optional[int]:
     root = Path(root)
     if not root.exists():
         return None
     steps = []
     for d in root.iterdir():
+        # ignore in-flight '.tmp' / mid-swap '.old' dirs: only a fully
+        # renamed 'step_<digits>' dir counts as a complete checkpoint
         if d.is_dir() and d.name.startswith('step_') and \
+                d.name.split('_', 1)[1].isdigit() and \
                 (d / 'manifest.json').exists():
             steps.append(int(d.name.split('_')[1]))
     return max(steps) if steps else None

@@ -1,5 +1,6 @@
 """Checkpoint save/restore: atomicity, async overlap, reshard-on-restore."""
 import json
+import os
 import threading
 import time
 from pathlib import Path
@@ -45,6 +46,71 @@ def test_atomic_overwrite(tmp_path):
     np.testing.assert_allclose(np.asarray(out['params']['w']),
                                np.asarray(tree2['params']['w']))
     assert not d.with_suffix('.tmp').exists()
+
+
+def test_resave_same_step_is_crash_safe(tmp_path, monkeypatch):
+    """Regression: re-saving an existing step dir must never pass through
+    a state with no complete checkpoint on disk.  A POSIX rename onto a
+    non-empty dir fails, and delete-then-rename leaves a window; the
+    swap-then-delete sequence keeps a full copy at every instant.  Here
+    the 'crash' hits right after the old dir is swapped aside: the
+    previous checkpoint must still be fully recoverable."""
+    tree = _tree()
+    d = tmp_path / 'step_00000004'
+    ckpt.save(d, tree, step=4)
+    real_rename = os.rename
+    calls = []
+
+    def crashing_rename(src, dst):
+        calls.append((str(src), str(dst)))
+        if str(dst) == str(d):       # tmp -> final: the simulated crash
+            raise OSError('simulated crash mid-swap')
+        return real_rename(src, dst)
+
+    tree2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x,
+                         tree)
+    monkeypatch.setattr(os, 'rename', crashing_rename)
+    with pytest.raises(OSError, match='simulated crash'):
+        ckpt.save(d, tree2, step=4)
+    monkeypatch.undo()
+    # at the crash instant a complete copy of the OLD checkpoint lives at
+    # <dir>.old and the NEW one at <dir>.tmp — nothing was destroyed
+    old = d.parent / (d.name + '.old')
+    assert (old / 'manifest.json').exists()
+    assert (d.with_suffix('.tmp') / 'manifest.json').exists()
+    # and a subsequent save cleans up the stale dirs and lands the data
+    ckpt.save(d, tree2, step=4)
+    assert not old.exists() and not d.with_suffix('.tmp').exists()
+    out = ckpt.restore(d, tree)
+    np.testing.assert_allclose(np.asarray(out['params']['w']),
+                               np.asarray(tree2['params']['w']))
+
+
+def test_latest_step_ignores_partial_dirs(tmp_path):
+    """'.tmp' (in-flight) and '.old' (mid-swap) dirs must never be picked
+    up as the latest checkpoint."""
+    ckpt.save(ckpt.step_dir(tmp_path, 5), _tree(), step=5)
+    stale = tmp_path / 'step_00000009.old'
+    stale.mkdir()
+    (stale / 'manifest.json').write_text('{}')
+    tmp = tmp_path / 'step_00000011.tmp'
+    tmp.mkdir()
+    (tmp / 'manifest.json').write_text('{}')
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_restore_named_roundtrip(tmp_path):
+    """Manifest-only restore: leaves come back by name with no target
+    tree (the MD restart bootstrap path)."""
+    tree = _tree()
+    d = tmp_path / 'step_00000006'
+    ckpt.save(d, tree, step=6, extra={'kind': 'test'})
+    leaves, manifest = ckpt.restore_named(d)
+    assert manifest['extra']['kind'] == 'test'
+    np.testing.assert_array_equal(leaves['params.w'],
+                                  np.asarray(tree['params']['w']))
+    np.testing.assert_array_equal(leaves['opt.count'],
+                                  np.asarray(tree['opt']['count']))
 
 
 def test_async_checkpointer(tmp_path):

@@ -1,0 +1,193 @@
+"""Resilient MD runtime: health-flag lattice, regrow+rollback recovery,
+dt-halving retries, MD checkpoint/restore, and fault injection.
+
+Every recovery path is driven by the deterministic fault injector
+(md/fault_inject.py) — no physics contrivances — and each test pins one
+clause of the failure contract in DESIGN.md ("Failure model & recovery
+contract")."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.snap import SnapConfig
+from repro.md.cell_list import CellOverflowError
+from repro.md.fault_inject import Fault, FaultInjector, SimulatedCrash
+from repro.md.integrate import MDState, init_velocities, run_nve
+from repro.md.lattice import paper_box, perturb
+from repro.md.neighbor import NeighborOverflowError, suggest_capacity
+from repro.md.resilience import (AtomEscapeError, EnergyDriftError,
+                                 NumericalBlowupError, RecoveryPolicy)
+
+CFG = SnapConfig(twojmax=2, rcut=3.0)
+BETA = jnp.asarray(
+    np.random.default_rng(0).normal(size=CFG.ncoeff) * 5e-3)
+
+
+def _fresh_state():
+    pos, box = paper_box(natoms=54)
+    return MDState(pos=perturb(pos, 0.02, seed=1).copy(),
+                   vel=init_velocities(54, 300.0, seed=2),
+                   box=box.copy())
+
+
+def _run(n_steps=12, **kw):
+    kw.setdefault('dt', 0.0005)
+    kw.setdefault('log_every', 3)
+    kw.setdefault('loop', 'device')
+    kw.setdefault('skin', 0.4)
+    kw.setdefault('max_nbors', 16)
+    return run_nve(CFG, BETA, 0.0, _fresh_state(), n_steps, **kw)
+
+
+def test_overflow_error_messages_suggest_capacity():
+    """Satellite: overflow errors carry observed count, capacity, and an
+    actionable regrown suggestion."""
+    e = NeighborOverflowError(27, 24)
+    assert e.max_count == 27 and e.max_nbors == 24
+    assert e.suggested == suggest_capacity(27)
+    assert f'max_nbors={e.suggested}' in str(e)
+    assert 'retry with' in str(e) and '27' in str(e) and '24' in str(e)
+    c = CellOverflowError(19, 16)
+    assert c.suggested == suggest_capacity(19)
+    assert f'cell_cap={c.suggested}' in str(c)
+    assert 'retry with' in str(c)
+
+
+def test_suggest_capacity_headroom():
+    s = suggest_capacity(26)
+    assert s >= int(np.ceil(26 * 1.3)) and s % 4 == 0
+    assert suggest_capacity(1) >= 4
+
+
+def test_guards_do_not_change_trajectory():
+    """Arming the health lattice must be trajectory-neutral: the guards
+    are pure observers (reductions into the flag carry)."""
+    _, plain = _run()
+    _, guarded = _run(policy=RecoveryPolicy(drift_tol=1.0))
+    assert plain == guarded
+
+
+def test_nan_injection_rolls_back_to_identical_trajectory():
+    """An injected non-finite force flags the chunk; rollback discards it
+    and the retry (clean snapshot) reproduces the fault-free run
+    bitwise."""
+    _, ref = _run(policy=RecoveryPolicy())
+    inj = FaultInjector([Fault(step=3, kind='nan_force')])
+    cache = {}
+    _, th = _run(policy=RecoveryPolicy(), fault_hook=inj, fn_cache=cache)
+    assert inj.fired and inj.fired[0]['kind'] == 'nan_force'
+    kinds = [e.kind for e in cache['recovery_events']]
+    assert 'rollback' in kinds
+    assert th == ref
+
+
+def test_overflow_regrows_once_and_matches_oversized_reference():
+    """Acceptance: an injected neighbor-capacity overflow completes via
+    regrow+rollback (no exception), with AT MOST ONE re-jit per regrow
+    (trace count 1 -> 2), and the trajectory matches an
+    oversized-capacity reference run to f32 tolerance."""
+    _, ref = _run(max_nbors=32, policy=RecoveryPolicy())  # oversized ref
+    inj = FaultInjector([Fault(step=6, kind='overflow_nbr')])
+    cache = {}
+    _, th = _run(policy=RecoveryPolicy(), fault_hook=inj, fn_cache=cache)
+    events = cache['recovery_events']
+    regrows = [e for e in events if e.kind == 'regrow']
+    assert len(regrows) == 1, events
+    old_k, new_k = regrows[0].detail['max_nbors']
+    assert new_k > old_k
+    # one chunk re-jit for the regrown shapes and nothing else — no
+    # silent per-chunk recompiles before or after the regrow
+    assert cache['device_trace_count']['traces'] == 2
+    a = np.array([[t['T'], t['pe'], t['etot']] for t in th])
+    b = np.array([[t['T'], t['pe'], t['etot']] for t in ref])
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-9)
+
+
+def test_cell_overflow_injection_recovers():
+    inj = FaultInjector([Fault(step=3, kind='overflow_cell')])
+    cache = {}
+    _, th = _run(policy=RecoveryPolicy(), fault_hook=inj, fn_cache=cache)
+    regrows = [e for e in cache['recovery_events'] if e.kind == 'regrow']
+    assert len(regrows) == 1
+    old_c, new_c = regrows[0].detail['cell_cap']
+    assert new_c > old_c
+    assert len(th) >= 4
+
+
+def test_persistent_nan_exhausts_retries_with_typed_error():
+    """A fault that survives rollback (persistent injection) must halve
+    dt a bounded number of times and then surface a typed error with
+    diagnostics — never loop forever or die with a bare NaN."""
+    inj = FaultInjector([Fault(step=3, kind='nan_force', persistent=True)])
+    cache = {}
+    policy = RecoveryPolicy(max_numeric_retries=2,
+                            retries_before_dt_halve=1)
+    with pytest.raises(NumericalBlowupError) as ei:
+        _run(policy=policy, fault_hook=inj, fn_cache=cache)
+    assert ei.value.diagnostics['retries'] == 2
+    # the injected NaN force propagates into vel/pos inside the first
+    # step, so the sticky state flag is what the boundary observes
+    assert 'nan' in str(ei.value)
+    kinds = [e.kind for e in cache['recovery_events']]
+    assert kinds.count('rollback') == 2 and 'dt_halve' in kinds
+    # dt was halved for the post-rollback retries
+    assert ei.value.diagnostics['dt'] == pytest.approx(0.00025)
+
+
+def test_drift_watchdog_raises_typed_error():
+    """An unreachable drift bound flags every chunk; retries cannot fix
+    physics, so the typed EnergyDriftError surfaces."""
+    policy = RecoveryPolicy(drift_tol=1e-300, max_numeric_retries=1)
+    with pytest.raises(EnergyDriftError):
+        _run(policy=policy)
+
+
+def test_checkpoint_restore_bitwise_identical(tmp_path):
+    """Acceptance: run 2k straight vs k + checkpoint + restore + k — the
+    continuation must be bitwise identical (full device-carry snapshots,
+    aligned chunk boundaries)."""
+    st0, straight = _run(n_steps=24, log_every=6, policy=RecoveryPolicy())
+    d = str(tmp_path / 'ckpt')
+    st1, head = _run(n_steps=12, log_every=6, policy=RecoveryPolicy(),
+                     checkpoint_dir=d, checkpoint_every=6)
+    st2 = _fresh_state()
+    st2, tail = run_nve(CFG, BETA, 0.0, st2, 12, dt=0.0005, log_every=6,
+                        loop='device', skin=0.4, max_nbors=16,
+                        policy=RecoveryPolicy(), checkpoint_dir=d,
+                        restore=True)
+    assert st2.step == 24
+    # final state bitwise equal to the uninterrupted run
+    assert np.array_equal(st2.pos, st0.pos)
+    assert np.array_equal(st2.vel, st0.vel)
+    # every thermo row logged by both runs is bitwise equal (the split
+    # run logs one extra segment-final row at the checkpoint boundary)
+    merged = {t['step']: t for t in head + tail}
+    for row in straight:
+        assert merged[row['step']] == row, (merged[row['step']], row)
+
+
+def test_crash_then_restore_continues(tmp_path):
+    """Simulated host death between chunks: the latest atomic snapshot
+    restores and the continuation matches the uninterrupted run."""
+    d = str(tmp_path / 'ckpt')
+    _, straight = _run(n_steps=12, policy=RecoveryPolicy())
+    inj = FaultInjector([Fault(step=9, kind='crash')])
+    with pytest.raises(SimulatedCrash):
+        _run(n_steps=12, policy=RecoveryPolicy(), fault_hook=inj,
+             checkpoint_dir=d, checkpoint_every=3)
+    st = _fresh_state()
+    st, tail = run_nve(CFG, BETA, 0.0, st, 3, dt=0.0005, log_every=3,
+                       loop='device', skin=0.4, max_nbors=16,
+                       policy=RecoveryPolicy(), checkpoint_dir=d,
+                       restore=True)
+    straight_tail = [t for t in straight if t['step'] > 9]
+    assert tail == straight_tail
+
+
+def test_legacy_no_policy_still_raises():
+    """Without a policy the device loop keeps its original contract:
+    first overflow raises at the chunk boundary."""
+    inj = FaultInjector([Fault(step=3, kind='overflow_nbr')])
+    with pytest.raises(NeighborOverflowError, match='retry with'):
+        _run(fault_hook=inj)
