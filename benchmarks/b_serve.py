@@ -1,0 +1,156 @@
+"""Open-loop serving benchmark for the force-evaluation service.
+
+Drives ``launch/serve_forces.ForceServer`` with a deterministic
+open-loop synthetic load (seeded arrivals + a seeded
+``RequestFaultPlan`` poisoning a configurable fraction of requests) and
+records in ``BENCH_serve.json``:
+
+- ``open_loop``: p50/p99 latency (ms), throughput (req/s), shed rate,
+  served/failed counts under a sustainable arrival rate;
+- ``overload``: the same load against a tiny queue at a hot rate — the
+  shed rate must be *visible* (admission control works) while every
+  admitted request still completes;
+- ``fault_recovery``: a kernel-path load with injected NaN + overflow
+  requests and persistent kernel faults — typed per-request failures,
+  transient-retry recoveries, and bucket quarantine, with the compile
+  count bounded by the bucket table.
+
+Latency semantics: the virtual clock advances by measured step
+durations, so p50/p99 include real compute + queueing delay.  On CPU
+the kernel path runs in Pallas interpret mode (see the artifact's
+``interpret`` provenance field); wall-clock numbers are only comparable
+between artifacts with matching provenance, as with every other BENCH
+file in this repo.
+
+    PYTHONPATH=src python -m benchmarks.b_serve [--requests 40]
+        [--impl jnp|kernel] [--rate 50] [--fraction-bad 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.snap import SnapConfig
+from repro.kernels.common import default_interpret
+from repro.launch.request_queue import BucketTable, ForceRequest
+from repro.launch.serve_forces import ForceResult, ForceServer, run_open_loop
+from repro.md.fault_inject import (RequestFaultPlan, ServeFault,
+                                   ServeFaultInjector,
+                                   poison_request_positions)
+from repro.md.lattice import paper_box, perturb
+
+TWOJMAX, RCUT = 2, 3.0
+TABLE = BucketTable(model_classes=((TWOJMAX, RCUT),), n_pads=(16, 64),
+                    nbor_ladder=(12,), batch=4)
+
+
+def make_load(n_requests, beta, fraction_bad=0.0, seed=0, rate=50.0):
+    """Deterministic open-loop schedule: seeded exponential inter-arrival
+    gaps, heterogeneous sizes, and a seeded fault plan poisoning
+    ``fraction_bad`` of the stream (NaN inputs / overflow-dense boxes)."""
+    plan = RequestFaultPlan(fraction=fraction_bad, seed=seed).assign(
+        n_requests)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    sizes = rng.choice([16, 54], size=n_requests)
+    schedule = []
+    for i in range(n_requests):
+        n = int(sizes[i])
+        pos, box = paper_box(natoms=n)
+        pos = perturb(pos, 0.03, seed=seed + i)
+        box = np.asarray(box, float)
+        kind = plan.get(i)
+        if kind == 'nan_pos':
+            pos = poison_request_positions(pos)
+        elif kind == 'overflow':
+            # denser than any ladder rung: every atom sees all others
+            pos = rng.uniform(0.0, 2.5, size=(16, 3))
+            box = np.array([2.5, 2.5, 2.5])
+        schedule.append((float(arrivals[i]), ForceRequest(
+            f'r{i}', pos=pos, box=box, beta=beta, twojmax=TWOJMAX,
+            rcut=RCUT)))
+    return schedule, plan
+
+
+def health_row(health, n_requests):
+    s = health.summary()
+    s['shed_rate'] = health.shed_count / max(n_requests, 1)
+    s['n_requests'] = n_requests
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--requests', type=int, default=40)
+    ap.add_argument('--impl', choices=('jnp', 'kernel'), default='jnp',
+                    help='serving path for the latency sections (the '
+                         'fault-recovery section always exercises the '
+                         'kernel path, since that is what quarantine '
+                         'degrades from)')
+    ap.add_argument('--rate', type=float, default=50.0,
+                    help='open-loop arrival rate, requests/s')
+    ap.add_argument('--fraction-bad', type=float, default=0.15)
+    ap.add_argument('--seed', type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+    beta = np.random.default_rng(args.seed).normal(size=cfg.ncoeff) * 5e-3
+    results = {}
+
+    # -- open loop: sustainable rate, mixed sizes, poisoned fraction ------
+    schedule, plan = make_load(args.requests, beta,
+                               fraction_bad=args.fraction_bad,
+                               seed=args.seed, rate=args.rate)
+    srv = ForceServer(TABLE, impl=args.impl, interpret=True,
+                      queue_depth=64)
+    health = run_open_loop(srv, schedule)
+    row = health_row(health, args.requests)
+    row['impl'] = args.impl
+    row['rate_rps'] = args.rate
+    row['fraction_bad'] = args.fraction_bad
+    results['open_loop'] = row
+    emit('serve_p50_ms', row['p50_ms'] * 1e-3, f"p99={row['p99_ms']:.2f}ms")
+    emit('serve_throughput', 0.0, f"{row['throughput_rps']:.1f} req/s "
+                                  f"shed={row['shed_rate']:.2f}")
+
+    # -- overload: tiny queue, hot rate -> admission control must shed ----
+    schedule2, _ = make_load(args.requests, beta, fraction_bad=0.0,
+                             seed=args.seed + 1, rate=args.rate * 40)
+    srv2 = ForceServer(TABLE, impl=args.impl, interpret=True,
+                       queue_depth=4)
+    health2 = run_open_loop(srv2, schedule2)
+    results['overload'] = health_row(health2, args.requests)
+    emit('serve_overload_shed', 0.0,
+         f"shed_rate={results['overload']['shed_rate']:.2f}")
+
+    # -- fault recovery on the kernel path --------------------------------
+    n_fr = 10
+    schedule3, plan3 = make_load(n_fr, beta, fraction_bad=0.3,
+                                 seed=args.seed + 2, rate=args.rate)
+    inj = ServeFaultInjector([ServeFault(step=2, kind='kernel_fault',
+                                         persistent=True)])
+    srv3 = ForceServer(TABLE, impl='kernel', interpret=True,
+                       queue_depth=64, quarantine_after=2, fault_hook=inj)
+    health3 = run_open_loop(srv3, schedule3)
+    outcomes = {f'r{i}': type(srv3.result(f'r{i}')).__name__
+                for i in range(n_fr)}
+    row3 = health_row(health3, n_fr)
+    row3['planned_faults'] = {f'r{i}': k for i, k in plan3.items()}
+    row3['outcomes'] = outcomes
+    row3['n_typed_failures'] = sum(
+        1 for v in outcomes.values() if v != 'ForceResult')
+    row3['injected_kernel_faults'] = len(inj.fired)
+    row3['max_buckets'] = len(TABLE.all_buckets())
+    results['fault_recovery'] = row3
+    emit('serve_fault_recovery', 0.0,
+         f"quarantined={row3['quarantined']} "
+         f"typed_failures={row3['n_typed_failures']}")
+
+    write_bench_json('serve', results, interpret=default_interpret())
+
+
+if __name__ == '__main__':
+    main()

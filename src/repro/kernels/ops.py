@@ -201,6 +201,82 @@ def make_sharded_force_fn(cfg: SnapConfig, beta, beta0, mesh, axis='data',
     return jax.jit(sm)
 
 
+def make_batched_force_fn(cfg: SnapConfig, n_pad: int, max_nbors: int,
+                          impl: str = 'kernel', dtype=jnp.float32,
+                          interpret=None, trace_counter=None, **kw):
+    """Batched (vmapped) force-evaluation entry for the serving front end.
+
+    Returns one jitted function
+
+        fn(pos [B, n_pad, 3], box [B, 3], beta [B, ncoeff], beta0 [B],
+           n_valid [B] int32) -> (e [B], forces [B, n_pad, 3],
+                                  flags [B, N_FLAGS] int32)
+
+    that evaluates ``B`` independent configurations per device step: each
+    lane runs the fixed-shape device neighbor build
+    (:func:`repro.md.cell_list.brute_neighbors_device`) followed by the
+    chosen force pipeline, all under one ``jax.vmap`` — so a batch of
+    same-bucket requests costs one compile and one dispatch.
+
+    Per-lane health flags reuse the :mod:`repro.md.cell_list` lattice
+    slots: ``FLAG_NBR_MAX`` carries the observed neighbor count (overflow
+    when it exceeds ``max_nbors``), ``FLAG_NAN_STATE`` latches non-finite
+    input positions, ``FLAG_NAN_FORCE`` non-finite output forces/energy.
+    Because every lane's flags are reduced over that lane only, a
+    poisoned or overflowing configuration marks *itself* and nothing
+    else — the fault-isolation contract the request server builds on
+    (lane independence is asserted bitwise in tests/test_serve.py).
+
+    ``trace_counter`` follows the ``fn_cache['device_trace_count']``
+    idiom of the MD driver: incremented once per (re)trace, so callers
+    can prove the bucket table bounds the compile count.
+
+    impl='kernel' forwards ``dtype``/``interpret``/**kw** to the Pallas
+    pipeline; impl='adjoint' (the jnp reference path, the serving layer's
+    quarantine target) takes no kernel knobs.
+    """
+    import jax
+
+    from repro.core.snap import energy_forces
+    from repro.md.cell_list import (FLAG_CELL_MAX, FLAG_NAN_FORCE,
+                                    FLAG_NAN_STATE, FLAG_NBR_MAX, N_FLAGS,
+                                    brute_neighbors_device)
+
+    if impl == 'kernel':
+        fkw = dict(dtype=dtype, interpret=interpret, **kw)
+    else:
+        fkw = dict(kw)
+
+    def lane(pos, box, beta, beta0, n_valid):
+        ok_atom = jnp.arange(n_pad, dtype=jnp.int32) < n_valid
+        nbr_idx, mask, disp, bflags = brute_neighbors_device(
+            pos, box, cfg.rcut, max_nbors, n_valid)
+        nan_state = jnp.logical_not(jnp.all(jnp.isfinite(
+            jnp.where(ok_atom[:, None], pos, 0.0))))
+        _, e_atom, f = energy_forces(
+            cfg, beta, beta0, disp[..., 0], disp[..., 1], disp[..., 2],
+            nbr_idx, mask, impl=impl, **fkw)
+        # padded atoms see zero neighbors but still carry the Wigner
+        # self-energy; mask them out of both outputs
+        f = jnp.where(ok_atom[:, None], f, 0.0)
+        e = jnp.sum(jnp.where(ok_atom, e_atom, 0.0))
+        nan_force = jnp.logical_not(
+            jnp.all(jnp.isfinite(f)) & jnp.isfinite(e))
+        flags = jnp.zeros(N_FLAGS, jnp.int32)
+        flags = flags.at[FLAG_NBR_MAX].set(bflags[0])
+        flags = flags.at[FLAG_CELL_MAX].set(bflags[1])
+        flags = flags.at[FLAG_NAN_FORCE].set(nan_force.astype(jnp.int32))
+        flags = flags.at[FLAG_NAN_STATE].set(nan_state.astype(jnp.int32))
+        return e, f, flags
+
+    def batched(pos, box, beta, beta0, n_valid):
+        if trace_counter is not None:
+            trace_counter['traces'] = trace_counter.get('traces', 0) + 1
+        return jax.vmap(lane)(pos, box, beta, beta0, n_valid)
+
+    return jax.jit(batched)
+
+
 # ---------------------------------------------------------------------------
 # per-stage wrappers (tests / benchmarks; each owns its own layout plumbing)
 # ---------------------------------------------------------------------------

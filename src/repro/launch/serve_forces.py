@@ -1,0 +1,430 @@
+"""MD-as-a-service front end: SNAP force evaluation behind a request queue.
+
+ROADMAP item 3 ("millions of users" axis): heterogeneous force-evaluation
+requests — varying atom count, cutoff, 2J — served by the kernel pipeline
+with a *provably bounded* compile count and per-request fault isolation.
+
+Pipeline of one request:
+
+    submit(req)  ->  BucketTable.select  (typed reject on unservable)
+                 ->  RequestQueue        (typed shed when full)
+    step(now)    ->  same-bucket batch, padded to the bucket's static
+                     [batch, n_pad, K] shapes
+                 ->  one vmapped jitted dispatch
+                     (repro.kernels.ops.make_batched_force_fn)
+                 ->  per-lane health flags decoded
+                     (repro.md.resilience.lane_health)
+
+Robustness contract (layered on PR 6's recovery primitives):
+
+- **Isolation**: flags are per batch lane, and lanes are computationally
+  independent under ``vmap`` — a NaN-poisoned or overflowing request
+  yields a typed :class:`~repro.launch.request_queue.RequestFailedError`
+  (with diagnostics and, for overflows, a suggested capacity) while its
+  batch peers return forces bitwise identical to a solo evaluation
+  through the same bucket (tested).
+- **Admission control**: the queue is bounded; excess load is shed with
+  :class:`~repro.launch.request_queue.ServiceOverloadError` at submit
+  time instead of queueing unboundedly.
+- **Deadlines + retry**: input-clean requests that come back numerically
+  flagged (transient fault) are requeued with exponential backoff until
+  their deadline or the retry budget runs out; expired requests fail
+  with :class:`~repro.launch.request_queue.DeadlineExceededError` before
+  touching the device.
+- **Graceful degradation**: a kernel-path fault (an exception out of the
+  compiled kernel entry, incl. injected
+  :class:`~repro.md.fault_inject.KernelPathFault`) re-runs the step on
+  the jnp reference path; after ``quarantine_after`` strikes the bucket
+  is quarantined to the reference path permanently — slower, never down.
+
+``ForceServer.health()`` reports queue depth, shed count, per-bucket
+compile counts (the trace-count proof), latency percentiles, throughput,
+and quarantine state.  :func:`run_open_loop` drives the server with a
+deterministic open-loop schedule for benchmarks (benchmarks/b_serve.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.snap import SnapConfig
+from repro.kernels.ops import make_batched_force_fn
+from repro.md.fault_inject import KernelPathFault
+from repro.md.neighbor import suggest_capacity
+from repro.md.resilience import lane_health
+
+from .request_queue import (Bucket, BucketTable, DeadlineExceededError,
+                            ForceRequest, QueueEntry, RequestFailedError,
+                            RequestQueue, RequestRejectedError,
+                            ServiceError, ServiceOverloadError)
+
+IMPLS = {'kernel': 'kernel', 'jnp': 'adjoint'}
+
+
+@dataclass
+class ForceResult:
+    """A successful per-request evaluation."""
+    req_id: str
+    energy: float
+    forces: np.ndarray            # [natoms, 3] (padding stripped)
+    latency: float                # completion - arrival (driver clock)
+    bucket_key: str
+    impl: str                     # 'kernel' | 'jnp' (path that produced it)
+    retries: int = 0
+
+
+@dataclass
+class ServiceHealth:
+    """One self-describing snapshot of the server (HealthReport-style)."""
+    queue_depth: int
+    shed_count: int
+    served: int
+    failed: int
+    deadline_missed: int
+    retries_scheduled: int
+    degraded_steps: int
+    compile_counts: Dict[str, int]       # 'bucket.key/impl' -> traces
+    kernel_faults: Dict[str, int]        # bucket.key -> strike count
+    quarantined: Tuple[str, ...]
+    p50_ms: float
+    p99_ms: float
+    throughput_rps: float
+
+    def summary(self) -> Dict:
+        return dict(self.__dict__)
+
+
+class ForceServer:
+    """Fault-isolated SNAP force-evaluation service (single device step
+    at a time; the batching axis is ``vmap`` over same-bucket requests).
+
+    All methods take explicit ``now`` timestamps — the server holds no
+    clock, so tests and the open-loop driver stay deterministic.
+    """
+
+    def __init__(self, table: BucketTable, impl: str = 'kernel',
+                 queue_depth: int = 64, quarantine_after: int = 2,
+                 max_retries: int = 2, backoff_s: float = 1e-3,
+                 dtype=jnp.float32, interpret=None,
+                 fault_hook: Optional[Callable] = None,
+                 force_kwargs: Optional[Dict] = None):
+        if impl not in IMPLS:
+            raise ValueError(f'unknown impl {impl!r}; choose from '
+                             f'{tuple(IMPLS)}')
+        self.table = table
+        self.impl = impl
+        self.quarantine_after = int(quarantine_after)
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.dtype = dtype
+        self.interpret = interpret
+        self.fault_hook = fault_hook
+        self.force_kwargs = dict(force_kwargs or {})
+        self.queue = RequestQueue(max_depth=queue_depth)
+        self._fns: Dict[Tuple[Bucket, str], Callable] = {}
+        self._trace_counts: Dict[Tuple[str, str], Dict] = {}
+        self._ncoeff: Dict[int, int] = {}
+        self._results: Dict[str, Union[ForceResult, ServiceError]] = {}
+        self._latencies: List[float] = []
+        self._kernel_faults: Dict[str, int] = {}
+        self._quarantined: set = set()
+        self._step_idx = 0
+        self._served = 0
+        self._failed = 0
+        self._deadline_missed = 0
+        self._retries_scheduled = 0
+        self._degraded_steps = 0
+        self._first_arrival: Optional[float] = None
+        self._last_completion: Optional[float] = None
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: ForceRequest, now: float = 0.0) -> Bucket:
+        """Admit one request (typed raise on reject/shed; the error is
+        also recorded as the request's result so callers that poll
+        ``result()`` see the same typed object)."""
+        try:
+            bucket = self.table.select(req)
+            ncoeff = self._ncoeff_for(bucket.twojmax)
+            if np.asarray(req.beta).shape != (ncoeff,):
+                raise RequestRejectedError(
+                    'beta length does not match the model class', dict(
+                        req_id=req.req_id, got=np.asarray(req.beta).shape,
+                        expect=(ncoeff,), twojmax=bucket.twojmax))
+            clean = bool(np.isfinite(req.pos).all()
+                         and np.isfinite(req.box).all()
+                         and np.isfinite(req.beta).all()
+                         and np.isfinite(req.beta0))
+            deadline = (None if req.deadline_s is None
+                        else now + float(req.deadline_s))
+            entry = QueueEntry(req=req, bucket=bucket, arrival=now,
+                               deadline_abs=deadline, input_clean=clean,
+                               not_before=now)
+            self.queue.submit(entry, now)
+        except ServiceError as err:
+            self._results[req.req_id] = err
+            self._failed += 1
+            raise
+        if self._first_arrival is None or now < self._first_arrival:
+            self._first_arrival = now
+        return bucket
+
+    def _ncoeff_for(self, twojmax: int) -> int:
+        if twojmax not in self._ncoeff:
+            self._ncoeff[twojmax] = SnapConfig(twojmax=twojmax).ncoeff
+        return self._ncoeff[twojmax]
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _fn(self, bucket: Bucket, impl: str) -> Callable:
+        key = (bucket, impl)
+        if key not in self._fns:
+            cfg = SnapConfig(twojmax=bucket.twojmax, rcut=bucket.rcut)
+            counter = self._trace_counts.setdefault(
+                (bucket.key, impl), {})
+            self._fns[key] = make_batched_force_fn(
+                cfg, bucket.n_pad, bucket.max_nbors, impl=IMPLS[impl],
+                dtype=self.dtype, interpret=self.interpret,
+                trace_counter=counter, **self.force_kwargs)
+        return self._fns[key]
+
+    def _pack(self, bucket: Bucket, live: List[QueueEntry]) -> Dict:
+        """Static [batch, n_pad, ...] arrays; empty lanes are inert
+        (n_valid=0, unit box) so padding can never flag or contaminate."""
+        B, n_pad = bucket.batch, bucket.n_pad
+        ncoeff = self._ncoeff_for(bucket.twojmax)
+        pos = np.zeros((B, n_pad, 3))
+        box = np.ones((B, 3))
+        beta = np.zeros((B, ncoeff))
+        beta0 = np.zeros(B)
+        n_valid = np.zeros(B, np.int32)
+        for i, e in enumerate(live):
+            n = e.req.natoms
+            pos[i, :n] = e.req.pos
+            box[i] = e.req.box
+            beta[i] = e.req.beta
+            beta0[i] = e.req.beta0
+            n_valid[i] = n
+        return dict(pos=jnp.asarray(pos), box=jnp.asarray(box),
+                    beta=jnp.asarray(beta), beta0=jnp.asarray(beta0),
+                    n_valid=jnp.asarray(n_valid))
+
+    def _strike(self, bucket: Bucket) -> None:
+        n = self._kernel_faults.get(bucket.key, 0) + 1
+        self._kernel_faults[bucket.key] = n
+        if n >= self.quarantine_after:
+            self._quarantined.add(bucket.key)
+
+    def step(self, now: float = 0.0,
+             timer: Callable[[], float] = time.perf_counter
+             ) -> Tuple[List[Union[ForceResult, ServiceError]], float]:
+        """Serve one batched device step.  Returns ``(finished, dt)``
+        where ``dt`` is the measured step duration per ``timer`` (pass a
+        constant timer for deterministic tests); completions are stamped
+        at ``now + dt``."""
+        t0 = timer()
+        batch = self.queue.next_batch(now)
+        if batch is None:
+            return [], 0.0
+        self._step_idx += 1
+        bucket = batch[0].bucket
+        finished: List[Union[ForceResult, ServiceError]] = []
+
+        live: List[QueueEntry] = []
+        for e in batch:
+            if e.deadline_abs is not None and now > e.deadline_abs:
+                err = DeadlineExceededError(
+                    'deadline passed before dispatch', dict(
+                        req_id=e.req.req_id, arrival=round(e.arrival, 6),
+                        deadline=round(e.deadline_abs, 6),
+                        now=round(now, 6), retries=e.retries))
+                self._deadline_missed += 1
+                finished.append(self._finish(e, err, now))
+                continue
+            live.append(e)
+        if not live:
+            return finished, timer() - t0
+
+        arrays = self._pack(bucket, live)
+        impl = 'jnp' if bucket.key in self._quarantined else self.impl
+        if self.fault_hook is not None:
+            try:
+                arrays = self.fault_hook(self._step_idx, bucket.key,
+                                         arrays, impl)
+            except KernelPathFault:
+                # kernel path died for this bucket: degrade this step to
+                # the jnp reference path and count a quarantine strike
+                self._strike(bucket)
+                impl = 'jnp'
+                self._degraded_steps += 1
+        if impl == 'kernel':
+            try:
+                out = self._fn(bucket, impl)(**arrays)
+                out = jax.block_until_ready(out)
+            except Exception:
+                self._strike(bucket)
+                impl = 'jnp'
+                self._degraded_steps += 1
+                out = None
+        else:
+            out = None
+        if out is None:
+            out = jax.block_until_ready(self._fn(bucket, 'jnp')(**arrays))
+        e_b, f_b, flags_b = (np.asarray(out[0]), np.asarray(out[1]),
+                             np.asarray(out[2]))
+
+        dt = timer() - t0
+        end = now + dt
+        for lane, entry in enumerate(live):
+            finished.extend(self._triage(entry, bucket, impl,
+                                         e_b[lane], f_b[lane],
+                                         flags_b[lane], now, end))
+        return finished, dt
+
+    def _triage(self, entry: QueueEntry, bucket: Bucket, impl: str,
+                e, f, flags, now: float, end: float):
+        """Decode one lane's flags into a result, a typed failure, or a
+        backed-off retry."""
+        rep = lane_health(flags, bucket.max_nbors, bucket.rcut)
+        req = entry.req
+        if rep.overflow:
+            err = RequestFailedError(
+                'neighbor capacity overflow', dict(
+                    req_id=req.req_id, observed=rep.nbr_max,
+                    max_nbors=bucket.max_nbors,
+                    suggested_max_nbors=suggest_capacity(rep.nbr_max),
+                    issues=tuple(rep.issues())))
+            return [self._finish(entry, err, end)]
+        if rep.numeric:
+            if not entry.input_clean:
+                err = RequestFailedError(
+                    'non-finite input configuration', dict(
+                        req_id=req.req_id, issues=tuple(rep.issues())))
+                return [self._finish(entry, err, end)]
+            deadline_ok = (entry.deadline_abs is None
+                           or now <= entry.deadline_abs)
+            if entry.retries < self.max_retries and deadline_ok:
+                # transient fault on clean input: retry with backoff —
+                # the requeued entry re-reads the clean request data
+                entry.retries += 1
+                entry.not_before = now + self.backoff_s \
+                    * (2.0 ** (entry.retries - 1))
+                self.queue.requeue(entry)
+                self._retries_scheduled += 1
+                return []
+            err = RequestFailedError(
+                'numeric fault persisted through retries', dict(
+                    req_id=req.req_id, retries=entry.retries,
+                    issues=tuple(rep.issues())))
+            return [self._finish(entry, err, end)]
+        n = req.natoms
+        res = ForceResult(req_id=req.req_id, energy=float(e),
+                          forces=np.array(f[:n]), latency=end - entry.arrival,
+                          bucket_key=bucket.key, impl=impl,
+                          retries=entry.retries)
+        return [self._finish(entry, res, end)]
+
+    def _finish(self, entry: QueueEntry, outcome, end: float):
+        self._results[entry.req.req_id] = outcome
+        if isinstance(outcome, ForceResult):
+            self._served += 1
+            self._latencies.append(outcome.latency)
+        else:
+            self._failed += 1
+        if self._last_completion is None or end > self._last_completion:
+            self._last_completion = end
+        return outcome
+
+    # -- convenience / introspection --------------------------------------
+
+    def result(self, req_id: str):
+        return self._results.get(req_id)
+
+    def evaluate(self, req: ForceRequest, now: float = 0.0,
+                 max_steps: int = 16):
+        """Solo evaluation through the serving path: submit, drain, return
+        the typed outcome.  Uses the same bucket table and compiled
+        entries as batched serving — this *is* the bitwise reference the
+        fault-isolation tests compare batched peers against."""
+        self.submit(req, now)
+        for _ in range(max_steps):
+            if req.req_id in self._results:
+                break
+            self.step(now, timer=lambda: 0.0)
+            now += max(self.backoff_s * 2 ** self.max_retries, 1e-6)
+        out = self._results.get(req_id := req.req_id)
+        if out is None:
+            raise RuntimeError(f'request {req_id} did not complete in '
+                               f'{max_steps} steps')
+        return out
+
+    def health(self) -> ServiceHealth:
+        lat = np.asarray(self._latencies) if self._latencies else None
+        span = None
+        if self._first_arrival is not None \
+                and self._last_completion is not None:
+            span = max(self._last_completion - self._first_arrival, 1e-9)
+        return ServiceHealth(
+            queue_depth=self.queue.depth,
+            shed_count=self.queue.shed_count,
+            served=self._served,
+            failed=self._failed,
+            deadline_missed=self._deadline_missed,
+            retries_scheduled=self._retries_scheduled,
+            degraded_steps=self._degraded_steps,
+            compile_counts={f'{bk}/{impl}': c.get('traces', 0)
+                            for (bk, impl), c in
+                            self._trace_counts.items()},
+            kernel_faults=dict(self._kernel_faults),
+            quarantined=tuple(sorted(self._quarantined)),
+            p50_ms=float(np.percentile(lat, 50) * 1e3) if lat is not None
+            else 0.0,
+            p99_ms=float(np.percentile(lat, 99) * 1e3) if lat is not None
+            else 0.0,
+            throughput_rps=(self._served / span) if span else 0.0,
+        )
+
+
+def run_open_loop(server: ForceServer,
+                  schedule: List[Tuple[float, ForceRequest]],
+                  timer: Callable[[], float] = time.perf_counter,
+                  max_steps: int = 100000) -> ServiceHealth:
+    """Drive the server with a deterministic *open-loop* schedule.
+
+    Arrivals fire at their scheduled times regardless of completions
+    (the load does not back off when the server is slow — that is what
+    makes shedding observable).  The virtual clock advances by each
+    step's *measured* duration, so recorded latencies are real compute
+    plus real queueing delay; when the server is idle the clock jumps to
+    the next event instead of busy-waiting.
+    """
+    schedule = sorted(schedule, key=lambda it: it[0])
+    clock = 0.0
+    i = 0
+    for _ in range(max_steps):
+        while i < len(schedule) and schedule[i][0] <= clock:
+            t, req = schedule[i]
+            i += 1
+            try:
+                server.submit(req, now=t)
+            except ServiceError:
+                pass                      # typed + recorded in results
+        done, dt = server.step(clock, timer=timer)
+        if dt > 0 or done:
+            clock += max(dt, 1e-9)
+            continue
+        # idle: advance to the next arrival or backoff expiry
+        pending = [schedule[i][0]] if i < len(schedule) else []
+        nxt = server.queue.next_eligible_time()
+        if nxt is not None:
+            pending.append(nxt)
+        if not pending:
+            break
+        clock = max(clock + 1e-9, min(pending))
+    return server.health()

@@ -201,6 +201,54 @@ def device_neighbors(pos, box, grid: CellGrid):
     return nbr_idx, mask, shifts, flags
 
 
+def brute_neighbors_device(pos, box, rcut, max_nbors: int, n_valid=None):
+    """Fixed-shape traced O(N^2) neighbor build for one configuration.
+
+    The serving counterpart of :func:`device_neighbors`: no grid statics
+    at all (the box is a *traced* value, so one compiled function serves
+    every box in a shape bucket), which makes it ``vmap``-able over a
+    batch of heterogeneous configurations — the per-bucket batched force
+    entry in :mod:`repro.kernels.ops` relies on exactly that.
+
+    ``n_valid`` (traced scalar) masks trailing padding atoms out of the
+    pair set, so one static ``[n_pad, K]`` shape serves every request
+    size up to ``n_pad``.  Like :func:`device_neighbors`, capacity
+    violations come back as count *flags* (slot ``FLAG_NBR_MAX``; the
+    cell slot stays 0 — there is no cell table here), never as silent
+    truncation: when the count exceeds ``max_nbors`` the packed list is
+    incomplete and the consumer must treat the lane as failed.  Non-finite
+    positions never produce pairs (NaN compares false), so a poisoned
+    configuration degrades to an empty pair set — detection is the force
+    layer's input/output finiteness flags, and the poison cannot spread
+    past its own lane.
+
+    Returns ``(nbr_idx [N, K] int32, mask [N, K] bool, disp [N, K, 3],
+    flags [2] int32)`` with ``disp = pos[nbr] - pos[i]`` minimum-imaged.
+    """
+    N = pos.shape[0]
+    iota = jnp.arange(N, dtype=jnp.int32)
+    nv = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
+    ok_atom = iota < nv
+    d = pos[None, :, :] - pos[:, None, :]
+    dd = d - box * jnp.round(d / box)
+    r2 = jnp.sum(dd * dd, axis=-1)
+    within = ((iota[None, :] != iota[:, None])
+              & ok_atom[None, :] & ok_atom[:, None]
+              & (r2 < rcut * rcut))
+    counts = within.sum(axis=1)
+    # pack valid candidates to the front (stable sort on the invalid flag,
+    # same idiom as device_neighbors) and truncate to the static width
+    key = jnp.logical_not(within).astype(jnp.int32)
+    ordk = jnp.argsort(key, axis=1)[:, :max_nbors].astype(jnp.int32)
+    mask = jnp.take_along_axis(within, ordk, axis=1)
+    nbr_idx = jnp.where(mask, ordk, 0)
+    disp = jnp.where(mask[..., None],
+                     jnp.take_along_axis(dd, ordk[..., None], axis=1), 0.0)
+    flags = jnp.stack([counts.max().astype(jnp.int32),
+                       jnp.zeros((), jnp.int32)])
+    return nbr_idx, mask, disp, flags
+
+
 def check_flags(flags, grid: CellGrid):
     """Host-boundary overflow check, mirroring the host builders' raises.
 

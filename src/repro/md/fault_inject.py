@@ -27,9 +27,10 @@ bounded-retry exhaustion path (typed errors) is tested.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from .cell_list import (FLAG_CELL_MAX, FLAG_NBR_MAX, CellGrid)
 
@@ -92,3 +93,123 @@ class FaultInjector:
                 carry['flags'] = jnp.asarray(carry['flags']).at[
                     FLAG_CELL_MAX].set(grid.cell_cap + 2)
         return carry
+
+
+# ---------------------------------------------------------------------------
+# request-level faults for the force-evaluation service (launch/serve_forces)
+# ---------------------------------------------------------------------------
+
+class KernelPathFault(RuntimeError):
+    """A deliberately induced kernel-path failure during a serve step.
+
+    Models the class of faults the graceful-degradation policy exists
+    for: the compiled kernel path dying on a bucket (driver bug, OOM,
+    miscompile) while the jnp reference path stays healthy.  The server
+    answers by re-running the step on the reference path and — after a
+    bounded number of such faults — quarantining the bucket to it.
+    """
+
+    def __init__(self, bucket_key: str, step: int):
+        self.bucket_key = bucket_key
+        self.step = int(step)
+        super().__init__(f'simulated kernel-path fault for bucket '
+                         f'{bucket_key} at serve step {self.step}')
+
+
+REQUEST_KINDS = ('nan_pos', 'overflow')
+
+
+def poison_request_positions(pos):
+    """NaN-poison one coordinate — the canonical bad-input request."""
+    pos = np.array(pos, dtype=float, copy=True)
+    pos[0, 0] = np.nan
+    return pos
+
+
+@dataclass
+class RequestFaultPlan:
+    """Deterministically poison a fraction of a synthetic request stream.
+
+    ``assign(n)`` picks ``round(fraction * n)`` request indices with a
+    seeded RNG and cycles them through ``kinds`` — same seed, same plan,
+    so the open-loop load generator (benchmarks/b_serve.py) and its CI
+    validation see identical fault mixes.  'nan_pos' requests carry a
+    non-finite coordinate; 'overflow' requests must be *constructed*
+    overflowing (denser than the bucket's neighbor width) by the load
+    generator — the plan only decides which indices get that treatment.
+    """
+    fraction: float = 0.1
+    seed: int = 0
+    kinds: tuple = REQUEST_KINDS
+
+    def assign(self, n_requests: int) -> Dict[int, str]:
+        for k in self.kinds:
+            if k not in REQUEST_KINDS:
+                raise ValueError(f'unknown request fault kind {k!r}; '
+                                 f'choose from {REQUEST_KINDS}')
+        n_bad = int(round(self.fraction * n_requests))
+        rng = np.random.default_rng(self.seed)
+        idx = rng.choice(n_requests, size=min(n_bad, n_requests),
+                         replace=False)
+        return {int(i): self.kinds[j % len(self.kinds)]
+                for j, i in enumerate(sorted(idx))}
+
+
+@dataclass
+class ServeFault:
+    """One serve-step fault: fires at the first step index >= ``step``."""
+    step: int
+    kind: str                  # 'kernel_fault' | 'transient_nan'
+    bucket_key: Optional[str] = None   # None = any bucket
+    persistent: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ('kernel_fault', 'transient_nan'):
+            raise ValueError(f'unknown serve fault kind {self.kind!r}')
+
+
+@dataclass
+class ServeFaultInjector:
+    """Deterministic per-step fault plan for the force server.
+
+    A valid ``fault_hook`` for :class:`repro.launch.serve_forces.ForceServer`:
+    called once per batch dispatch with ``(step, bucket_key, arrays,
+    impl)`` *after* admission (so the rollback target — the queued
+    request — is clean, mirroring the MD injector's post-snapshot
+    contract).
+
+    - 'kernel_fault' raises :class:`KernelPathFault`: the server retries
+      the step on the jnp reference path and counts a strike toward the
+      bucket's quarantine.  It only fires when the dispatching path is
+      the kernel one — a kernel-path bug cannot hit the reference path,
+      which is exactly why quarantine ends the fault storm.
+    - 'transient_nan' poisons the dispatched position batch (every lane)
+      on any path: input-clean requests come back flagged, and the
+      server requeues them with backoff — the retry sees the clean
+      queued data.
+    """
+    faults: List[ServeFault]
+    fired: List[Dict] = field(default_factory=list)
+
+    def __call__(self, step: int, bucket_key: str, arrays: Dict,
+                 impl: str = 'kernel') -> Dict:
+        arrays = dict(arrays)
+        for fault in self.faults:
+            if step < fault.step:
+                continue
+            if fault.kind == 'kernel_fault' and impl != 'kernel':
+                continue
+            if fault.bucket_key is not None \
+                    and fault.bucket_key != bucket_key:
+                continue
+            if not fault.persistent and any(
+                    f['kind'] == fault.kind and f['fault_step'] == fault.step
+                    for f in self.fired):
+                continue
+            self.fired.append(dict(step=step, fault_step=fault.step,
+                                   kind=fault.kind, bucket=bucket_key))
+            if fault.kind == 'kernel_fault':
+                raise KernelPathFault(bucket_key, step)
+            arrays['pos'] = jnp.asarray(arrays['pos']).at[:, 0, 0].set(
+                jnp.nan)
+        return arrays

@@ -183,6 +183,22 @@ class HealthReport:
             diagnostics)
 
 
+def lane_health(flags, max_nbors: int, rcut: float) -> HealthReport:
+    """Decode one *batch lane's* flag vector from the serving path.
+
+    The batched force entry (:func:`repro.kernels.ops.make_batched_force_fn`)
+    emits the same ``FLAG_*`` lattice as the MD device loop but per request
+    lane, with no cell table behind it — so the capacity context is just
+    the bucket's ``max_nbors``.  A synthetic single-cell grid carries that
+    bound so every :class:`HealthReport` property (``overflow``,
+    ``numeric``, ``ok``, ``issues``) works unchanged on serving lanes.
+    """
+    grid = CellGrid(nbins=(1, 1, 1), cell_cap=2 ** 30,
+                    max_nbors=int(max_nbors), rcut=float(rcut), skin=0.0,
+                    stencil=())
+    return HealthReport.from_flags(flags, grid)
+
+
 def regrow_grid(grid: CellGrid, report: HealthReport,
                 policy: RecoveryPolicy) -> CellGrid:
     """New grid with overflowed capacities regrown (headroom applied).

@@ -27,9 +27,15 @@ from typing import Dict, List, Optional, Sequence, Set
 
 
 class HeartbeatMonitor:
-    def __init__(self, workers: Sequence[str], timeout_s: float = 60.0):
+    def __init__(self, workers: Sequence[str], timeout_s: float = 60.0,
+                 now: float = 0.0):
+        """``now`` is the construction time on the caller's clock and
+        counts as every worker's first beat — a freshly constructed
+        monitor must never declare workers dead before they have had a
+        full ``timeout_s`` to report (initializing to 0.0 made all
+        workers look dead the moment the clock passed ``timeout_s``)."""
         self.timeout_s = timeout_s
-        self.last_seen: Dict[str, float] = {w: 0.0 for w in workers}
+        self.last_seen: Dict[str, float] = {w: float(now) for w in workers}
 
     def beat(self, worker: str, now: float):
         self.last_seen[worker] = now

@@ -18,6 +18,25 @@ def test_heartbeat_death_detection():
     assert mon.alive(now=12.0) == {'w0', 'w1'}
 
 
+def test_heartbeat_construction_counts_as_first_beat():
+    """Regression: ``last_seen`` initialized to 0.0 made every worker
+    look dead as soon as the clock passed ``timeout_s``, even if the
+    monitor had just been constructed — construction time must count as
+    the first beat."""
+    mon = HeartbeatMonitor(['w0', 'w1'], timeout_s=10, now=100.0)
+    # no beats yet, but the timeout window starts at construction
+    assert mon.alive(now=105.0) == {'w0', 'w1'}
+    assert mon.dead(now=109.9) == set()
+    # a worker that still never beat is dead one timeout after creation
+    mon.beat('w0', now=108.0)
+    assert mon.dead(now=111.0) == {'w1'}
+    assert mon.alive(now=111.0) == {'w0'}
+    # default construction (now=0.0) keeps the legacy behaviour for
+    # callers that beat immediately, but is alive within the window
+    fresh = HeartbeatMonitor(['a'], timeout_s=60)
+    assert fresh.alive(now=59.0) == {'a'}
+
+
 def test_straggler_detection():
     pol = StragglerPolicy(threshold=1.5, window=10, patience=5)
     for step in range(10):
