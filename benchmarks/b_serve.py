@@ -13,7 +13,14 @@ records in ``BENCH_serve.json``:
 - ``fault_recovery``: a kernel-path load with injected NaN + overflow
   requests and persistent kernel faults — typed per-request failures,
   transient-retry recoveries, and bucket quarantine, with the compile
-  count bounded by the bucket table.
+  count bounded by the bucket table;
+- ``journal_overhead``: the same warmed load served with and without a
+  write-ahead journal attached — wall-clock throughput ratio (the
+  durability tax; gated at <= 10% in CI) plus journal size/event counts;
+- ``recovery``: a chaos soak (``launch/chaos.run_chaos_soak``) composing
+  poisoned requests, persistent kernel faults, an overload burst, and
+  two mid-step crashes — invariant verdict, per-restart recovery time,
+  and replayed-request counts.
 
 Latency semantics: the virtual clock advances by measured step
 durations, so p50/p99 include real compute + queueing delay.  On CPU
@@ -29,15 +36,19 @@ file in this repo.
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
+import time
 
 import numpy as np
 
 from benchmarks.common import emit, write_bench_json
 from repro.core.snap import SnapConfig
 from repro.kernels.common import default_interpret
+from repro.launch.chaos import run_chaos_soak
 from repro.launch.request_queue import BucketTable, ForceRequest
 from repro.launch.serve_forces import ForceResult, ForceServer, run_open_loop
-from repro.md.fault_inject import (RequestFaultPlan, ServeFault,
+from repro.md.fault_inject import (ChaosPlan, RequestFaultPlan, ServeFault,
                                    ServeFaultInjector,
                                    poison_request_positions)
 from repro.md.lattice import paper_box, perturb
@@ -148,6 +159,72 @@ def main(argv=None):
     emit('serve_fault_recovery', 0.0,
          f"quarantined={row3['quarantined']} "
          f"typed_failures={row3['n_typed_failures']}")
+
+    # -- journal overhead: the durability tax on a warmed server ----------
+    schedule4, _ = make_load(args.requests, beta, fraction_bad=0.0,
+                             seed=args.seed + 3, rate=args.rate)
+
+    def timed_serving(journal_path):
+        srv = ForceServer(TABLE, impl=args.impl, interpret=True,
+                          queue_depth=64, journal=journal_path)
+        for n in (16, 54):            # compile both buckets outside the
+            srv.evaluate(ForceRequest(        # timed window
+                f'warm{n}', *_warm_payload(n), beta=beta,
+                twojmax=TWOJMAX, rcut=RCUT), now=0.0)
+        t0 = time.perf_counter()
+        run_open_loop(srv, schedule4)
+        return srv, time.perf_counter() - t0
+
+    def _warm_payload(n):
+        pos, box = paper_box(natoms=n)
+        return perturb(pos, 0.03, seed=999 + n), np.asarray(box, float)
+
+    # best-of-2 per variant: the runs are short, so one scheduler hiccup
+    # would otherwise dominate the ratio
+    wall_nj = min(timed_serving(None)[1] for _ in range(2))
+    with tempfile.TemporaryDirectory() as d:
+        walls_j = []
+        for k in range(2):
+            jpath = os.path.join(d, f'journal{k}.jsonl')
+            srv_j, w = timed_serving(jpath)
+            walls_j.append(w)
+            jbytes = os.path.getsize(jpath)
+        wall_j = min(walls_j)
+    row4 = dict(
+        n_requests=args.requests, impl=args.impl,
+        wall_nojournal_s=wall_nj, wall_journal_s=wall_j,
+        throughput_nojournal_rps=args.requests / max(wall_nj, 1e-9),
+        throughput_journal_rps=args.requests / max(wall_j, 1e-9),
+        overhead_ratio=wall_j / max(wall_nj, 1e-9),
+        journal_events=srv_j.health().journal_seq,
+        journal_bytes=jbytes,
+        fsync_every=srv_j._journal.fsync_every if srv_j._journal else 0)
+    results['journal_overhead'] = row4
+    emit('serve_journal_overhead', 0.0,
+         f"ratio={row4['overhead_ratio']:.3f} "
+         f"({row4['journal_events']} events, {jbytes} B)")
+
+    # -- recovery: chaos soak with >= 2 mid-step crashes ------------------
+    plan = ChaosPlan(n_requests=10, seed=args.seed, fraction_bad=0.2,
+                     kernel_fault_step=1, crash_dispatches=(3, 6),
+                     overload_burst_at=0.05, overload_burst_n=8)
+    with tempfile.TemporaryDirectory() as d:
+        rep = run_chaos_soak(plan, d, table=TABLE, interpret=True)
+    n_restores = max(len(rep.crashes_fired), 1)
+    row5 = dict(
+        ok=rep.ok, violations=rep.violations,
+        incarnations=rep.incarnations, crashes_fired=rep.crashes_fired,
+        n_requests=rep.n_requests, served=rep.served, failed=rep.failed,
+        shed_or_rejected=rep.shed_or_rejected,
+        replayed=rep.replayed_total, journal_events=rep.journal_events,
+        recovery_ms_per_restart=rep.recovery_s * 1e3 / n_restores,
+        bitwise_checked=rep.bitwise_checked,
+        quarantined=list(rep.quarantined))
+    results['recovery'] = row5
+    emit('serve_recovery', 0.0,
+         f"ok={rep.ok} crashes={len(rep.crashes_fired)} "
+         f"replayed={rep.replayed_total} "
+         f"recovery={row5['recovery_ms_per_restart']:.1f}ms/restart")
 
     write_bench_json('serve', results, interpret=default_interpret())
 

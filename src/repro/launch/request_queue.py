@@ -59,6 +59,32 @@ class RequestFailedError(ServiceError):
     """
 
 
+class ServiceDrainingError(ServiceError):
+    """Admission refused: the server is draining toward shutdown."""
+
+
+class DuplicateRequestError(ServiceError):
+    """A ``req_id`` was resubmitted while the original is still in
+    flight.  (Resubmitting a *terminal* accepted request is idempotent —
+    the stored outcome is returned, never recomputed — so only the
+    in-flight case is an error.)"""
+
+
+#: Error-class registry by name — how server snapshots rehydrate typed
+#: failure outcomes (runtime/checkpoint manifests store only JSON).
+ERROR_TYPES = {}
+
+
+def _register_errors():
+    for cls in (ServiceError, RequestRejectedError, ServiceOverloadError,
+                DeadlineExceededError, RequestFailedError,
+                ServiceDrainingError, DuplicateRequestError):
+        ERROR_TYPES[cls.__name__] = cls
+
+
+_register_errors()
+
+
 @dataclass
 class ForceRequest:
     """One force-evaluation request: a configuration plus its model class.
@@ -205,17 +231,24 @@ class RequestQueue:
         """FIFO-fair batch: the oldest *eligible* entry picks the bucket,
         then up to ``bucket.batch`` eligible same-bucket entries join it.
         Returns None when nothing is eligible (empty, or all entries are
-        backing off — see :meth:`next_eligible_time`)."""
+        backing off — see :meth:`next_eligible_time`).
+
+        Single-pass partition: entries are split into the dispatched
+        batch and the surviving queue in one traversal (the previous
+        ``list.remove`` per batch member was quadratic in queue depth),
+        preserving FIFO order in both (regression-tested)."""
         head = next((e for e in self.entries if e.not_before <= now), None)
         if head is None:
             return None
-        batch = []
+        batch: List[QueueEntry] = []
+        rest: List[QueueEntry] = []
         for e in self.entries:
             if (e.bucket == head.bucket and e.not_before <= now
                     and len(batch) < head.bucket.batch):
                 batch.append(e)
-        for e in batch:
-            self.entries.remove(e)
+            else:
+                rest.append(e)
+        self.entries = rest
         return batch
 
     def next_eligible_time(self) -> Optional[float]:

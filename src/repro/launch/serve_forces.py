@@ -36,16 +36,35 @@ Robustness contract (layered on PR 6's recovery primitives):
   :class:`~repro.md.fault_inject.KernelPathFault`) re-runs the step on
   the jnp reference path; after ``quarantine_after`` strikes the bucket
   is quarantined to the reference path permanently — slower, never down.
+- **Durability** (DESIGN.md "Durability contract"): with a
+  :class:`~repro.launch.journal.Journal` attached, every admitted
+  request is journaled ``accepted`` (payload included) before
+  ``submit`` returns its ack, and every terminal outcome is journaled
+  before it is stored — so :meth:`ForceServer.restore` can rebuild a
+  crashed server from (snapshot, journal tail) with every acked,
+  non-terminal request re-admitted exactly once (idempotent by
+  ``req_id``) and quarantine/strike knowledge intact.
+- **Bounded memory**: terminal outcomes live in a capacity-bounded
+  :class:`ResultStore` (oldest evicted first) and latency statistics in
+  a fixed-size :class:`LatencyReservoir`, so a long-lived server's
+  bookkeeping cannot grow without bound.
+- **Graceful lifecycle**: :meth:`ForceServer.drain` closes admission
+  (typed :class:`~repro.launch.request_queue.ServiceDrainingError`),
+  serves the backlog until a deadline, fails the remainder with
+  deadline errors, and writes a final snapshot.
 
 ``ForceServer.health()`` reports queue depth, shed count, per-bucket
 compile counts (the trace-count proof), latency percentiles, throughput,
 and quarantine state.  :func:`run_open_loop` drives the server with a
-deterministic open-loop schedule for benchmarks (benchmarks/b_serve.py).
+deterministic open-loop schedule for benchmarks (benchmarks/b_serve.py);
+:mod:`repro.launch.chaos` composes every fault class over crash/restart
+cycles and checks the durability invariants.
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -58,13 +77,96 @@ from repro.kernels.ops import make_batched_force_fn
 from repro.md.fault_inject import KernelPathFault
 from repro.md.neighbor import suggest_capacity
 from repro.md.resilience import lane_health
+from repro.runtime import checkpoint as ckpt
 
-from .request_queue import (Bucket, BucketTable, DeadlineExceededError,
+from .journal import (Journal, forces_digest, pack_array, read_events,
+                      unpack_array)
+from .journal import _jsonable as _json_safe
+from .journal import replay as replay_journal
+from .request_queue import (ERROR_TYPES, Bucket, BucketTable,
+                            DeadlineExceededError, DuplicateRequestError,
                             ForceRequest, QueueEntry, RequestFailedError,
                             RequestQueue, RequestRejectedError,
-                            ServiceError, ServiceOverloadError)
+                            ServiceDrainingError, ServiceError,
+                            ServiceOverloadError)
 
 IMPLS = {'kernel': 'kernel', 'jnp': 'adjoint'}
+
+SNAPSHOT_KIND = 'force_server_v1'
+
+
+class ResultStore:
+    """Capacity-bounded terminal-outcome store (oldest evicted first).
+
+    Replaces the unbounded ``_results`` dict: a long-lived server holds
+    at most ``capacity`` terminal outcomes, evicting in insertion order
+    (all stored outcomes are terminal, so the oldest is always the one
+    clients are least likely to still poll).  Each entry also records
+    whether the request was *accepted* (passed admission) — that flag is
+    the resubmission-dedup witness, so the idempotence window equals the
+    store capacity (documented in DESIGN.md; the journal, not the store,
+    is the authoritative exactly-once record across restarts).
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = max(1, int(capacity))
+        self._d: 'OrderedDict[str, Tuple[object, bool]]' = OrderedDict()
+        self.evicted = 0
+
+    def put(self, req_id: str, outcome, acked: bool) -> None:
+        if req_id in self._d:
+            del self._d[req_id]           # re-record moves to newest
+        self._d[req_id] = (outcome, bool(acked))
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evicted += 1
+
+    def get(self, req_id: str):
+        v = self._d.get(req_id)
+        return v[0] if v is not None else None
+
+    def acked(self, req_id: str) -> bool:
+        v = self._d.get(req_id)
+        return bool(v is not None and v[1])
+
+    def items(self):
+        """(req_id, outcome, acked) in insertion (oldest-first) order."""
+        return [(rid, out, ack) for rid, (out, ack) in self._d.items()]
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, req_id: str) -> bool:
+        return req_id in self._d
+
+
+class LatencyReservoir:
+    """Fixed-size uniform sample of completion latencies (Algorithm R).
+
+    Replaces the unbounded ``_latencies`` list: percentiles are computed
+    over at most ``k`` retained samples however long the server runs.
+    Deterministic for a given seed and completion order.
+    """
+
+    def __init__(self, k: int = 512, seed: int = 0):
+        self.k = max(1, int(k))
+        self.count = 0
+        self.values: List[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        if len(self.values) < self.k:
+            self.values.append(float(x))
+            return
+        j = int(self._rng.integers(0, self.count))
+        if j < self.k:
+            self.values[j] = float(x)
+
+    def percentile(self, q: float) -> float:
+        if not self.values:
+            return 0.0
+        return float(np.percentile(np.asarray(self.values), q))
 
 
 @dataclass
@@ -95,6 +197,11 @@ class ServiceHealth:
     p50_ms: float
     p99_ms: float
     throughput_rps: float
+    store_depth: int = 0                 # bounded result-store occupancy
+    store_evicted: int = 0               # outcomes evicted at capacity
+    journal_seq: int = 0                 # last journaled event (0 = none)
+    replayed: int = 0                    # requests re-admitted by restore
+    draining: bool = False
 
     def summary(self) -> Dict:
         return dict(self.__dict__)
@@ -113,7 +220,9 @@ class ForceServer:
                  max_retries: int = 2, backoff_s: float = 1e-3,
                  dtype=jnp.float32, interpret=None,
                  fault_hook: Optional[Callable] = None,
-                 force_kwargs: Optional[Dict] = None):
+                 force_kwargs: Optional[Dict] = None,
+                 journal: Optional[Union[Journal, str]] = None,
+                 result_cap: int = 256, latency_reservoir: int = 512):
         if impl not in IMPLS:
             raise ValueError(f'unknown impl {impl!r}; choose from '
                              f'{tuple(IMPLS)}')
@@ -127,13 +236,19 @@ class ForceServer:
         self.fault_hook = fault_hook
         self.force_kwargs = dict(force_kwargs or {})
         self.queue = RequestQueue(max_depth=queue_depth)
+        self._journal: Optional[Journal] = (
+            journal if isinstance(journal, Journal) or journal is None
+            else Journal(journal))
         self._fns: Dict[Tuple[Bucket, str], Callable] = {}
         self._trace_counts: Dict[Tuple[str, str], Dict] = {}
         self._ncoeff: Dict[int, int] = {}
-        self._results: Dict[str, Union[ForceResult, ServiceError]] = {}
-        self._latencies: List[float] = []
+        self._store = ResultStore(capacity=result_cap)
+        self._reservoir = LatencyReservoir(k=latency_reservoir)
+        self._inflight: Dict[str, QueueEntry] = {}
         self._kernel_faults: Dict[str, int] = {}
         self._quarantined: set = set()
+        self._draining = False
+        self._replayed = 0
         self._step_idx = 0
         self._served = 0
         self._failed = 0
@@ -148,7 +263,42 @@ class ForceServer:
     def submit(self, req: ForceRequest, now: float = 0.0) -> Bucket:
         """Admit one request (typed raise on reject/shed; the error is
         also recorded as the request's result so callers that poll
-        ``result()`` see the same typed object)."""
+        ``result()`` see the same typed object).
+
+        Resubmission is idempotent by ``req_id``: while the original is
+        in flight a typed :class:`DuplicateRequestError` is raised (and
+        the in-flight request is untouched); after an *accepted* request
+        reached its terminal outcome, resubmitting returns its bucket
+        without re-enqueueing and ``result()`` keeps the stored outcome.
+        Admission-time rejects/sheds were never acked, so those ids may
+        be resubmitted fresh.  With a journal attached, the ``accepted``
+        event is appended before ``submit`` returns — the ack is durable.
+        """
+        rid = req.req_id
+        if rid in self._inflight:
+            raise DuplicateRequestError(
+                'req_id resubmitted while the original is in flight',
+                dict(req_id=rid,
+                     bucket=self._inflight[rid].bucket.key))
+        if self._store.acked(rid):
+            return self.table.select(req)  # idempotent: keep the outcome
+        if self._draining:
+            err = ServiceDrainingError(
+                'server is draining; admission closed', dict(
+                    req_id=rid, now=round(now, 6)))
+            self._store.put(rid, err, acked=False)
+            self._failed += 1
+            raise err
+        deadline = (None if req.deadline_s is None
+                    else now + float(req.deadline_s))
+        return self._admit(req, now, deadline)
+
+    def _admit(self, req: ForceRequest, now: float,
+               deadline_abs: Optional[float], retries: int = 0,
+               replayed: bool = False) -> Bucket:
+        """Admission core shared by :meth:`submit` and journal replay
+        (replay preserves the original absolute deadline and retry
+        count instead of restarting them)."""
         try:
             bucket = self.table.select(req)
             ncoeff = self._ncoeff_for(bucket.twojmax)
@@ -161,16 +311,34 @@ class ForceServer:
                          and np.isfinite(req.box).all()
                          and np.isfinite(req.beta).all()
                          and np.isfinite(req.beta0))
-            deadline = (None if req.deadline_s is None
-                        else now + float(req.deadline_s))
             entry = QueueEntry(req=req, bucket=bucket, arrival=now,
-                               deadline_abs=deadline, input_clean=clean,
+                               deadline_abs=deadline_abs,
+                               input_clean=clean,
+                               retries=min(int(retries), self.max_retries),
                                not_before=now)
             self.queue.submit(entry, now)
         except ServiceError as err:
-            self._results[req.req_id] = err
+            # a *replayed* request was already acked in a previous life,
+            # so an admission failure now is its terminal outcome and
+            # must reach the journal (else the ack would look lost)
+            self._store.put(req.req_id, err, acked=replayed)
             self._failed += 1
+            if replayed and self._journal is not None:
+                self._journal.append('failed', req.req_id, t=now,
+                                     error=type(err).__name__,
+                                     message=str(err))
             raise
+        self._inflight[req.req_id] = entry
+        if self._journal is not None:
+            self._journal.append(
+                'accepted', req.req_id, t=now, bucket=bucket.key,
+                deadline_abs=deadline_abs, replayed=replayed,
+                req=dict(pos=pack_array(req.pos),
+                         box=pack_array(req.box),
+                         beta=pack_array(req.beta),
+                         twojmax=req.twojmax, rcut=req.rcut,
+                         beta0=req.beta0, deadline_s=req.deadline_s,
+                         max_nbors_hint=req.max_nbors_hint))
         if self._first_arrival is None or now < self._first_arrival:
             self._first_arrival = now
         return bucket
@@ -317,6 +485,10 @@ class ForceServer:
                     * (2.0 ** (entry.retries - 1))
                 self.queue.requeue(entry)
                 self._retries_scheduled += 1
+                if self._journal is not None:
+                    self._journal.append('requeued', req.req_id,
+                                         retries=entry.retries,
+                                         not_before=entry.not_before)
                 return []
             err = RequestFailedError(
                 'numeric fault persisted through retries', dict(
@@ -331,20 +503,194 @@ class ForceServer:
         return [self._finish(entry, res, end)]
 
     def _finish(self, entry: QueueEntry, outcome, end: float):
-        self._results[entry.req.req_id] = outcome
+        rid = entry.req.req_id
+        self._inflight.pop(rid, None)
+        if self._journal is not None:
+            # journal before store: a crash between the two re-derives
+            # the store from the journal, never the other way round
+            if isinstance(outcome, ForceResult):
+                self._journal.append(
+                    'completed', rid, t=end, impl=outcome.impl,
+                    energy=outcome.energy,
+                    forces_sha=forces_digest(outcome.forces),
+                    latency=outcome.latency, retries=outcome.retries)
+            else:
+                self._journal.append(
+                    'failed', rid, t=end,
+                    error=type(outcome).__name__, message=str(outcome))
+        self._store.put(rid, outcome, acked=True)
         if isinstance(outcome, ForceResult):
             self._served += 1
-            self._latencies.append(outcome.latency)
+            self._reservoir.add(outcome.latency)
         else:
             self._failed += 1
         if self._last_completion is None or end > self._last_completion:
             self._last_completion = end
         return outcome
 
+    # -- lifecycle: drain, snapshot, restore -------------------------------
+
+    def drain(self, deadline: float, now: float = 0.0,
+              timer: Callable[[], float] = time.perf_counter,
+              snapshot_dir=None, max_steps: int = 100000) -> ServiceHealth:
+        """Graceful shutdown: close admission (subsequent submits raise
+        :class:`ServiceDrainingError`), serve the backlog until the
+        absolute ``deadline`` (same clock as ``now``), fail whatever is
+        left with :class:`DeadlineExceededError`, then write a final
+        snapshot (if ``snapshot_dir``) and sync the journal.  Every
+        backlog request reaches exactly one terminal outcome."""
+        self._draining = True
+        for _ in range(max_steps):
+            if self.queue.depth == 0 or now >= deadline:
+                break
+            done, dt = self.step(now, timer=timer)
+            if dt > 0 or done:
+                now += max(dt, 1e-9)
+                continue
+            nxt = self.queue.next_eligible_time()
+            if nxt is None or nxt >= deadline:
+                break                     # backlog is all beyond deadline
+            now = max(now + 1e-9, nxt)
+        remainder, self.queue.entries = self.queue.entries, []
+        for e in remainder:
+            err = DeadlineExceededError(
+                'drain deadline reached before service', dict(
+                    req_id=e.req.req_id, deadline=round(deadline, 6),
+                    now=round(now, 6), retries=e.retries))
+            self._deadline_missed += 1
+            self._finish(e, err, now)
+        if snapshot_dir is not None:
+            self.snapshot(snapshot_dir, now=now)
+        if self._journal is not None:
+            self._journal.sync()
+        return self.health()
+
+    def snapshot(self, ckpt_dir, now: float = 0.0) -> None:
+        """Crash-safe server-state snapshot on the
+        :mod:`repro.runtime.checkpoint` leaf format: quarantine set,
+        strike counts, counters, the bounded result store (forces as
+        per-leaf ``.npy``), and the latency reservoir.  The journal is
+        fsynced first so a snapshot is never *ahead* of the journal."""
+        if self._journal is not None:
+            self._journal.sync()
+        results_meta: List[Dict] = []
+        forces_leaves: List[np.ndarray] = []
+        for rid, outcome, acked in self._store.items():
+            m: Dict = dict(req_id=rid, acked=bool(acked))
+            if isinstance(outcome, ForceResult):
+                m.update(kind='result', energy=float(outcome.energy),
+                         latency=float(outcome.latency),
+                         bucket_key=outcome.bucket_key,
+                         impl=outcome.impl, retries=int(outcome.retries),
+                         forces_leaf=len(forces_leaves))
+                forces_leaves.append(np.asarray(outcome.forces))
+            else:
+                m.update(kind='error', error=type(outcome).__name__,
+                         message=str(outcome),
+                         diagnostics=_json_safe(
+                             getattr(outcome, 'diagnostics', {})))
+            results_meta.append(m)
+        tree = dict(forces=forces_leaves,
+                    reservoir=np.asarray(self._reservoir.values, float))
+        extra = dict(
+            kind=SNAPSHOT_KIND, now=float(now),
+            journal_seq=self._journal.seq if self._journal else 0,
+            quarantined=sorted(self._quarantined),
+            kernel_faults={k: int(v)
+                           for k, v in self._kernel_faults.items()},
+            results=results_meta,
+            counters=dict(served=self._served, failed=self._failed,
+                          deadline_missed=self._deadline_missed,
+                          retries_scheduled=self._retries_scheduled,
+                          degraded_steps=self._degraded_steps,
+                          step_idx=self._step_idx,
+                          shed_count=self.queue.shed_count,
+                          store_evicted=self._store.evicted,
+                          reservoir_count=self._reservoir.count,
+                          replayed=self._replayed))
+        ckpt.save(ckpt_dir, tree, step=self._step_idx, extra=extra)
+
+    def _load_snapshot(self, ckpt_dir) -> None:
+        leaves, manifest = ckpt.restore_named(ckpt_dir)
+        extra = manifest['extra']
+        if extra.get('kind') != SNAPSHOT_KIND:
+            raise ValueError(f'not a force-server snapshot: '
+                             f'{extra.get("kind")!r}')
+        self._quarantined = set(extra['quarantined'])
+        self._kernel_faults = {k: int(v)
+                               for k, v in extra['kernel_faults'].items()}
+        c = extra['counters']
+        self._served = int(c['served'])
+        self._failed = int(c['failed'])
+        self._deadline_missed = int(c['deadline_missed'])
+        self._retries_scheduled = int(c['retries_scheduled'])
+        self._degraded_steps = int(c['degraded_steps'])
+        self._step_idx = int(c['step_idx'])
+        self._replayed = int(c.get('replayed', 0))
+        self.queue.shed_count = int(c['shed_count'])
+        self._store.evicted = int(c['store_evicted'])
+        self._reservoir.values = [float(x)
+                                  for x in leaves.get('reservoir', [])]
+        self._reservoir.count = int(c['reservoir_count'])
+        for m in extra['results']:
+            if m['kind'] == 'result':
+                outcome: Union[ForceResult, ServiceError] = ForceResult(
+                    req_id=m['req_id'], energy=float(m['energy']),
+                    forces=np.asarray(leaves[f'forces.{m["forces_leaf"]}']),
+                    latency=float(m['latency']),
+                    bucket_key=m['bucket_key'], impl=m['impl'],
+                    retries=int(m['retries']))
+            else:
+                errcls = ERROR_TYPES.get(m['error'], ServiceError)
+                outcome = errcls(m['message'])
+                outcome.diagnostics = dict(m.get('diagnostics', {}))
+            self._store.put(m['req_id'], outcome, acked=m['acked'])
+
+    @classmethod
+    def restore(cls, table: BucketTable, journal, snapshot=None,
+                now: float = 0.0, **kwargs) -> 'ForceServer':
+        """Rebuild a crashed server from its journal (path or
+        :class:`Journal`) plus an optional state snapshot directory.
+
+        The snapshot restores quarantine/strike knowledge, counters and
+        the bounded result store; the journal tail is then replayed so
+        every journaled-``accepted`` request without a terminal event is
+        re-admitted **exactly once** (idempotent by ``req_id`` — replay
+        re-admissions are themselves journaled, and repeated restores
+        collapse onto the first terminal outcome).  Original absolute
+        deadlines and retry counts are preserved, so an outage consumes
+        a request's deadline rather than silently extending it."""
+        srv = cls(table, journal=journal, **kwargs)
+        if snapshot is not None:
+            srv._load_snapshot(snapshot)
+        state = replay_journal(read_events(srv._journal.path))
+        replayed = 0
+        for rec in state.pending:
+            if srv._store.acked(rec.req_id) or rec.req_id in srv._inflight:
+                continue                  # snapshot already terminal
+            ev = rec.accepted
+            p = ev['req']
+            req = ForceRequest(
+                req_id=rec.req_id, pos=unpack_array(p['pos']),
+                box=unpack_array(p['box']),
+                beta=unpack_array(p['beta']),
+                twojmax=int(p['twojmax']), rcut=float(p['rcut']),
+                beta0=float(p['beta0']), deadline_s=p.get('deadline_s'),
+                max_nbors_hint=p.get('max_nbors_hint'))
+            try:
+                srv._admit(req, now, ev.get('deadline_abs'),
+                           retries=rec.requeues, replayed=True)
+            except ServiceError:
+                pass                      # typed + recorded in the store
+            else:
+                replayed += 1
+        srv._replayed = replayed
+        return srv
+
     # -- convenience / introspection --------------------------------------
 
     def result(self, req_id: str):
-        return self._results.get(req_id)
+        return self._store.get(req_id)
 
     def evaluate(self, req: ForceRequest, now: float = 0.0,
                  max_steps: int = 16):
@@ -354,18 +700,17 @@ class ForceServer:
         fault-isolation tests compare batched peers against."""
         self.submit(req, now)
         for _ in range(max_steps):
-            if req.req_id in self._results:
+            if req.req_id in self._store:
                 break
             self.step(now, timer=lambda: 0.0)
             now += max(self.backoff_s * 2 ** self.max_retries, 1e-6)
-        out = self._results.get(req_id := req.req_id)
+        out = self._store.get(req_id := req.req_id)
         if out is None:
             raise RuntimeError(f'request {req_id} did not complete in '
                                f'{max_steps} steps')
         return out
 
     def health(self) -> ServiceHealth:
-        lat = np.asarray(self._latencies) if self._latencies else None
         span = None
         if self._first_arrival is not None \
                 and self._last_completion is not None:
@@ -383,11 +728,14 @@ class ForceServer:
                             self._trace_counts.items()},
             kernel_faults=dict(self._kernel_faults),
             quarantined=tuple(sorted(self._quarantined)),
-            p50_ms=float(np.percentile(lat, 50) * 1e3) if lat is not None
-            else 0.0,
-            p99_ms=float(np.percentile(lat, 99) * 1e3) if lat is not None
-            else 0.0,
+            p50_ms=self._reservoir.percentile(50) * 1e3,
+            p99_ms=self._reservoir.percentile(99) * 1e3,
             throughput_rps=(self._served / span) if span else 0.0,
+            store_depth=len(self._store),
+            store_evicted=self._store.evicted,
+            journal_seq=self._journal.seq if self._journal else 0,
+            replayed=self._replayed,
+            draining=self._draining,
         )
 
 

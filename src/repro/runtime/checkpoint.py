@@ -150,8 +150,20 @@ def restore_named(ckpt_dir) -> tuple:
     recorded names/shapes/dtypes are the contract — so a restart process
     that has not yet built its state (e.g. an MD restore deciding grid
     capacities from the checkpoint itself) can bootstrap from disk alone.
+
+    Tolerates a crash inside :func:`save`'s swap window: when the final
+    dir is missing (or missing its manifest) but ``<dir>.old`` holds a
+    complete checkpoint — the re-save died after renaming the old copy
+    aside and before renaming the tmp copy into place — the ``.old``
+    copy *is* the latest complete checkpoint and is restored from.
+    (``save`` deletes stale ``.old`` dirs before swapping, so one can
+    only coexist with a missing final dir inside that window.)
     """
     ckpt_dir = Path(ckpt_dir)
+    if not (ckpt_dir / 'manifest.json').exists():
+        old = ckpt_dir.parent / (ckpt_dir.name + '.old')
+        if (old / 'manifest.json').exists():
+            ckpt_dir = old
     manifest = json.loads((ckpt_dir / 'manifest.json').read_text())
     leaves = {}
     for meta in manifest['leaves']:

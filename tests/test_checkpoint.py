@@ -86,6 +86,40 @@ def test_resave_same_step_is_crash_safe(tmp_path, monkeypatch):
                                np.asarray(tree2['params']['w']))
 
 
+def test_restore_named_falls_back_to_old_in_swap_window(tmp_path,
+                                                        monkeypatch):
+    """A crash *inside* the swap window — after the live dir was renamed
+    to '<dir>.old', before the tmp dir was renamed into place — leaves
+    no final dir at all.  restore_named must then read the '.old' copy,
+    which at that instant IS the latest complete checkpoint (this is the
+    window a serving restart can land in mid-snapshot-re-save)."""
+    tree = _tree()
+    d = tmp_path / 'snap'
+    ckpt.save(d, tree, step=1, extra=dict(kind='probe'))
+    real_rename = os.rename
+
+    def crashing_rename(src, dst):
+        if str(src) == str(d.with_suffix('.tmp')):   # tmp -> final
+            raise OSError('simulated crash mid-swap')
+        return real_rename(src, dst)
+
+    tree2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x,
+                         tree)
+    monkeypatch.setattr(os, 'rename', crashing_rename)
+    with pytest.raises(OSError, match='simulated crash'):
+        ckpt.save(d, tree2, step=2, extra=dict(kind='probe'))
+    monkeypatch.undo()
+    assert not (d / 'manifest.json').exists()        # the window is real
+    leaves, manifest = ckpt.restore_named(d)
+    assert manifest['step'] == 1                     # the old copy won
+    np.testing.assert_allclose(leaves['params.w'],
+                               np.asarray(tree['params']['w']))
+    # once a re-save completes, the final dir takes precedence again
+    ckpt.save(d, tree2, step=2, extra=dict(kind='probe'))
+    _, manifest2 = ckpt.restore_named(d)
+    assert manifest2['step'] == 2
+
+
 def test_latest_step_ignores_partial_dirs(tmp_path):
     """'.tmp' (in-flight) and '.old' (mid-swap) dirs must never be picked
     up as the latest checkpoint."""
