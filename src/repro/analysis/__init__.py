@@ -1,0 +1,25 @@
+"""Static-analysis lint suite for the pipeline's jitted entry points.
+
+Five passes over closed jaxprs and optimized HLO text (see DESIGN.md
+"Static analysis contract"):
+
+- ``host_sync`` — no host-callback primitive reachable from a hot path;
+- ``retrace``  — abstract signatures stable across builds, static args
+  hashable, live compile counts as expected (jit-cache fission lint);
+- ``dtype``    — no accidental f64 upcasts or bf16 leaks outside each
+  entry's declared precision policy;
+- ``memory``   — padded-lane FLOP fraction and materialized top-level
+  broadcasts bounded;
+- ``budget``   — measured traffic/compile metrics under the checked-in
+  ``ANALYSIS_BUDGETS.json`` ratchet.
+
+Run ``python -m repro.analysis``.  This module stays import-light:
+:mod:`repro.kernels.ops` and friends import :mod:`.retrace` for the
+shared trace-counter helper, so pulling the registry (which imports
+them back) at package-import time would cycle.
+"""
+
+from .findings import (ALL_PASSES, Finding, EntryReport, Report,  # noqa: F401
+                       SEV_ERROR, SEV_WARN)
+from .retrace import (TRACE_KEY, assert_trace_count, record_trace,  # noqa: F401
+                      trace_count)

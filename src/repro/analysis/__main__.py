@@ -1,0 +1,112 @@
+"""``python -m repro.analysis`` — run the static-analysis suite.
+
+Prints the findings table, optionally writes the JSON report (the CI
+artifact), checks the budget ratchet against ``ANALYSIS_BUDGETS.json``,
+and exits nonzero on any unallowlisted error-severity finding.
+
+    python -m repro.analysis                       # full registry + budgets
+    python -m repro.analysis --entry force.kernel.half
+    python -m repro.analysis --json report.json    # write CI artifact
+    python -m repro.analysis --write-budgets       # regenerate budgets
+    python -m repro.analysis --registry tests/foo.py:my_registry
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import os
+import sys
+from typing import Callable, List
+
+
+def _load_registry(spec: str) -> Callable[[], List]:
+    """Resolve ``module.path:attr`` or ``/path/to/file.py:attr`` to the
+    registry factory (a zero-arg callable returning EntryPoints)."""
+    mod_part, _, attr = spec.rpartition(':')
+    if not mod_part:
+        raise SystemExit(f'--registry must be MODULE:ATTR, got {spec!r}')
+    if mod_part.endswith('.py') or os.path.sep in mod_part:
+        loader_spec = importlib.util.spec_from_file_location(
+            '_analysis_registry', mod_part)
+        if loader_spec is None or loader_spec.loader is None:
+            raise SystemExit(f'cannot load registry file {mod_part!r}')
+        mod = importlib.util.module_from_spec(loader_spec)
+        loader_spec.loader.exec_module(mod)
+    else:
+        mod = importlib.import_module(mod_part)
+    return getattr(mod, attr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog='python -m repro.analysis',
+        description='static-analysis lint suite over the registered '
+                    'jitted entry points')
+    ap.add_argument('--registry',
+                    default='repro.analysis.registry:default_registry',
+                    help='MODULE:ATTR or file.py:ATTR returning the '
+                         'entry-point list')
+    ap.add_argument('--entry', action='append', default=None,
+                    help='analyze only this entry (repeatable)')
+    ap.add_argument('--budgets', default=None,
+                    help="budgets JSON path (default ANALYSIS_BUDGETS.json "
+                         "next to the repo root; 'none' disables)")
+    ap.add_argument('--write-budgets', action='store_true',
+                    help='measure, then (re)write the budgets file '
+                         'instead of checking it')
+    ap.add_argument('--json', default=None, metavar='PATH',
+                    help='write the full JSON report here')
+    ap.add_argument('--no-execute', action='store_true',
+                    help='skip live execution (trace/lower only; '
+                         'disables the cache-fission check)')
+    ap.add_argument('--list', action='store_true',
+                    help='list registered entry points and exit')
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update('jax_enable_x64', True)   # match tests/conftest.py
+
+    from .budgets import DEFAULT_PATH, load_budgets, write_budgets
+    from .runner import run_registry
+
+    entries = _load_registry(args.registry)()
+    if args.entry:
+        want = set(args.entry)
+        unknown = want - {ep.name for ep in entries}
+        if unknown:
+            raise SystemExit(f'unknown entries: {sorted(unknown)}; have '
+                             f'{sorted(ep.name for ep in entries)}')
+        entries = [ep for ep in entries if ep.name in want]
+    if args.list:
+        for ep in entries:
+            print(f'{ep.name:<28} {ep.description}')
+        return 0
+
+    budget_path = args.budgets or DEFAULT_PATH
+    budgets = None
+    if not args.write_budgets and budget_path != 'none':
+        budgets = load_budgets(budget_path)
+        if budgets is None and args.budgets is not None:
+            raise SystemExit(f'budgets file not found: {budget_path}')
+
+    report = run_registry(
+        entries, budgets=budgets, execute=not args.no_execute,
+        progress=lambda name: print(f'analyzing {name} ...',
+                                    file=sys.stderr))
+
+    if args.write_budgets:
+        write_budgets(report, budget_path)
+        print(f'wrote {budget_path}', file=sys.stderr)
+
+    print(report.table())
+    if args.json:
+        with open(args.json, 'w') as f:
+            f.write(report.dumps())
+        print(f'report written to {args.json}', file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == '__main__':
+    sys.exit(main())

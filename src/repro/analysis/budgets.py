@@ -1,0 +1,146 @@
+"""The budget ratchet: checked-in per-entry ceilings on the metrics the
+static analysis measures (plane bytes, collective bytes, compile counts,
+finding counts).
+
+``ANALYSIS_BUDGETS.json`` at the repo root is the contract: CI fails if
+any entry's measured value exceeds its budget, so traffic and compile
+regressions can't land silently; improving a metric is free until
+someone tightens the budget.  Byte budgets carry headroom (XLA emits
+slightly different programs across versions); counts are exact.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from .findings import Finding, PASS_BUDGET, SEV_WARN, Report
+
+DEFAULT_PATH = 'ANALYSIS_BUDGETS.json'
+
+# metrics the ratchet tracks, with the headroom rule applied when
+# (re)generating budgets from a measured report:
+#   'exact'  — integer counts, no headroom
+#   'bytes'  — x1.5 headroom, ceil to int (XLA version skew)
+#   'frac'   — +0.05 absolute, capped at 1.0
+_METRIC_RULES = {
+    'findings': 'exact',
+    'compile_count': 'exact',
+    'plane_bytes': 'bytes',
+    'plane_bytes_loop': 'bytes',
+    'collective_bytes': 'bytes',
+    'hbm_bytes': 'bytes',
+    'broadcast_bytes_max': 'bytes',
+    'pad_waste_frac': 'frac',
+}
+
+BYTES_HEADROOM = 1.5
+FRAC_HEADROOM = 0.05
+
+
+def load_budgets(path: str = DEFAULT_PATH) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _measured(entry_report) -> Dict[str, float]:
+    vals = dict(entry_report.metrics)
+    vals['findings'] = len(entry_report.findings)
+    return vals
+
+
+def check_budgets(report: Report, budgets: Dict) -> List[Finding]:
+    """Compare a measured report against checked-in budgets.
+
+    Errors: a metric over budget, or an entry that ran with no budget
+    entry at all (new entry points must be budgeted when registered).
+    Warnings: a budgeted entry that didn't run (e.g. the sharded path on
+    a single-device host) or a budgeted metric the run didn't measure.
+    """
+    findings: List[Finding] = []
+    per_entry = budgets.get('entries', {})
+    seen = set()
+    for er in report.entries:
+        seen.add(er.entry)
+        bud = per_entry.get(er.entry)
+        if bud is None:
+            findings.append(Finding(
+                pass_name=PASS_BUDGET, code='unbudgeted-entry',
+                entry=er.entry,
+                message=(f'entry {er.entry!r} has no budget in '
+                         f'{DEFAULT_PATH} — run with --write-budgets and '
+                         f'check in the result'),
+                detail=dict(available=sorted(per_entry))))
+            continue
+        vals = _measured(er)
+        for key, limit in sorted(bud.items()):
+            if key not in vals:
+                findings.append(Finding(
+                    pass_name=PASS_BUDGET, code='metric-missing',
+                    entry=er.entry, severity=SEV_WARN,
+                    message=(f'budgeted metric {key!r} was not measured '
+                             f'for {er.entry!r}'),
+                    detail=dict(metric=key, budget=limit)))
+                continue
+            got = vals[key]
+            if got > limit:
+                findings.append(Finding(
+                    pass_name=PASS_BUDGET, code='over-budget',
+                    entry=er.entry,
+                    message=(f'{key} = {_fmt(got)} exceeds budget '
+                             f'{_fmt(limit)} — a regression landed, or '
+                             f'ratchet the budget deliberately'),
+                    detail=dict(metric=key, measured=got, budget=limit)))
+    for name in sorted(set(per_entry) - seen):
+        findings.append(Finding(
+            pass_name=PASS_BUDGET, code='entry-not-run', entry=name,
+            severity=SEV_WARN,
+            message=(f'budgeted entry {name!r} did not run (device-count '
+                     f'gated, or filtered with --entry)'),
+            detail=dict()))
+    return findings
+
+
+def make_budgets(report: Report) -> Dict:
+    """Generate a budgets document from a measured report, applying the
+    per-metric headroom rules."""
+    entries: Dict[str, Dict] = {}
+    for er in report.entries:
+        vals = _measured(er)
+        bud: Dict[str, float] = {}
+        for key, rule in _METRIC_RULES.items():
+            if key not in vals:
+                continue
+            v = vals[key]
+            if rule == 'exact':
+                bud[key] = int(v)
+            elif rule == 'bytes':
+                bud[key] = int(math.ceil(v * BYTES_HEADROOM))
+            else:
+                bud[key] = round(min(1.0, float(v) + FRAC_HEADROOM), 3)
+        entries[er.entry] = bud
+    return dict(
+        _comment=('Per-entry ceilings for repro.analysis metrics. '
+                  'Byte budgets carry 1.5x headroom for XLA version '
+                  'skew; counts are exact. Regenerate with '
+                  '`python -m repro.analysis --write-budgets` and review '
+                  'the diff — loosening a budget is a deliberate act.'),
+        entries=entries)
+
+
+def write_budgets(report: Report, path: str = DEFAULT_PATH) -> Dict:
+    doc = make_budgets(report)
+    with open(path, 'w') as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write('\n')
+    return doc
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float) and not v.is_integer():
+        return f'{v:.4g}'
+    return str(int(v)) if isinstance(v, float) else str(v)

@@ -1,0 +1,107 @@
+"""HLO-level structural passes: padding waste, materialized broadcasts,
+and the traffic metrics the budget ratchet consumes.
+
+These passes run on *optimized* HLO text through the trip-count-corrected
+parser in :mod:`repro.launch.hlo_cost` — the same machinery that gates
+the half-plane traffic win in CI — so what the lint counts is what the
+benchmark counts.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Tuple
+
+from repro.launch.hlo_cost import HloCost
+
+from .findings import Finding, PASS_MEMORY
+
+
+def pad_waste(hc: HloCost, pad_dims: Mapping[int, int]) -> Dict:
+    """Fraction of dot FLOPs landing on padded lanes.
+
+    ``pad_dims`` maps a *padded* extent to its *logical* extent (e.g.
+    ``{128: 120}`` for 120 atoms on a 128-lane axis).  Any dot whose
+    result carries a padded extent spends ``1 - logical/padded`` of its
+    work on dead lanes; summed FLOP-weighted over every reachable dot
+    this is the pipeline's MXU padding tax.  Dimension matching is by
+    extent (the HLO symbol table has no axis names), which can
+    over-count when an unrelated dimension coincides with a padded
+    extent — an overestimate applied identically to every entry under
+    comparison, like :meth:`HloCost.plane_bytes`.
+    """
+    pads = {int(p): int(l) for p, l in pad_dims.items()}
+    total = 0.0
+    wasted = 0.0
+    for dot in hc.dot_summary():
+        total += dot['flops']
+        live = 1.0
+        for d in dot['result_dims']:
+            if d in pads:
+                live *= pads[d] / float(d)
+        wasted += dot['flops'] * (1.0 - live)
+    frac = (wasted / total) if total > 0 else 0.0
+    return dict(flops_dot=total, flops_padded=wasted, pad_waste_frac=frac)
+
+
+def memory_pass(entry: str, hc: HloCost,
+                pad_dims: Mapping[int, int] | None = None,
+                broadcast_bytes_limit: int = 1 << 21,
+                pad_waste_limit: float = 0.5,
+                plane_rows: Tuple[int, ...] = (),
+                lane_cols: Tuple[int, ...] = (128,),
+                ) -> Tuple[List[Finding], Dict]:
+    """Padding-waste + broadcast-materialization analysis of one entry.
+
+    Returns ``(findings, metrics)``; metrics always include the budget
+    ratchet inputs (``hbm_bytes``, ``collective_bytes``, ``flops_dot``,
+    ``pad_waste_frac``, ``broadcast_bytes_max`` and — when the entry
+    declares plane rows — ``plane_bytes``/``plane_bytes_loop``).
+    """
+    findings: List[Finding] = []
+    totals = hc.totals()
+    metrics: Dict[str, float] = dict(
+        hbm_bytes=totals['hbm_bytes'],
+        flops_dot=totals['flops_dot'],
+        collective_bytes=totals['collective_bytes'],
+    )
+
+    bc = hc.materialized_broadcasts(min_bytes=0)
+    metrics['broadcast_bytes_max'] = max((r['total_bytes'] for r in bc),
+                                         default=0.0)
+    for r in bc:
+        if r['total_bytes'] < broadcast_bytes_limit:
+            continue
+        findings.append(Finding(
+            pass_name=PASS_MEMORY, code='materialized-broadcast',
+            entry=entry,
+            message=(f"top-level broadcast %{r['instr']} materializes "
+                     f"{r['dtype']}{r['dims']} = "
+                     f"{r['total_bytes'] / 2**20:.1f} MiB "
+                     f"(x{r['mult']:g} trips) — should fuse into its "
+                     f"consumer or stay an implicit broadcast"),
+            detail=dict(instr=r['instr'], dims=r['dims'],
+                        dtype=r['dtype'], total_bytes=r['total_bytes'],
+                        mult=r['mult'],
+                        limit_bytes=broadcast_bytes_limit)))
+
+    pw = pad_waste(hc, pad_dims or {})
+    metrics['pad_waste_frac'] = pw['pad_waste_frac']
+    if pad_dims and pw['pad_waste_frac'] > pad_waste_limit:
+        findings.append(Finding(
+            pass_name=PASS_MEMORY, code='pad-waste', entry=entry,
+            message=(f"{100 * pw['pad_waste_frac']:.1f}% of dot FLOPs "
+                     f"land on padded lanes (limit "
+                     f"{100 * pad_waste_limit:.0f}%) — shrink the pad "
+                     f"ladder or tile the lane axis"),
+            detail=dict(pad_waste_frac=pw['pad_waste_frac'],
+                        limit=pad_waste_limit,
+                        flops_dot=pw['flops_dot'],
+                        flops_padded=pw['flops_padded'],
+                        pad_dims={str(k): v
+                                  for k, v in (pad_dims or {}).items()})))
+
+    if plane_rows:
+        metrics['plane_bytes'] = hc.plane_bytes(plane_rows, lane_cols)
+        metrics['plane_bytes_loop'] = hc.plane_bytes(
+            plane_rows, lane_cols, loop_only=True)
+    return findings, metrics

@@ -1,0 +1,238 @@
+"""Jaxpr-level lint passes: host-sync detection, dtype drift, and the
+retrace-surface (jit-cache-fission) lint.
+
+These passes walk *closed jaxprs* — the pre-XLA program — recursively
+through every sub-jaxpr (pjit bodies, scan/while bodies, cond branches,
+custom-derivative subtrees, Pallas kernel bodies), tracking whether an
+equation sits inside a trip-counted loop body (the "hot body" of the
+paper's device loop).  HLO-level structural analysis lives in
+:mod:`repro.analysis.hlo_passes`.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterator, List, Tuple
+
+import jax
+import numpy as np
+
+from .findings import (Finding, PASS_DTYPE, PASS_HOST_SYNC, PASS_RETRACE,
+                       SEV_ERROR, SEV_WARN)
+from .retrace import trace_count
+
+# primitives that force a device->host round trip when they run (the
+# paper's 22x depended on there being none of these in the hot loop)
+_HOST_SYNC_EXACT = frozenset((
+    'infeed', 'outfeed', 'debug_print', 'host_local_array_to_global_array',
+))
+_HOST_SYNC_SUBSTR = ('callback',)     # pure_callback / io_callback / debug_callback
+
+_LOOP_PRIMS = frozenset(('scan', 'while'))
+
+_FLOAT_NARROW = ('float16', 'bfloat16', 'float32')
+
+
+def iter_eqns(jaxpr, loop_depth: int = 0) -> Iterator[Tuple[object, int]]:
+    """Yield ``(eqn, loop_depth)`` for every equation reachable from
+    ``jaxpr`` (a ``Jaxpr`` or ``ClosedJaxpr``), recursing through every
+    jaxpr-valued equation parameter.  ``loop_depth`` counts enclosing
+    scan/while bodies — anything at depth >= 1 executes per loop trip."""
+    inner = getattr(jaxpr, 'jaxpr', jaxpr)
+    for eqn in inner.eqns:
+        yield eqn, loop_depth
+        child_depth = loop_depth + (1 if eqn.primitive.name in _LOOP_PRIMS
+                                    else 0)
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, child_depth)
+
+
+def _sub_jaxprs(eqn) -> List[object]:
+    out = []
+    for v in eqn.params.values():
+        out.extend(_collect_jaxprs(v))
+    return out
+
+
+def _collect_jaxprs(v) -> List[object]:
+    if hasattr(v, 'eqns') or hasattr(v, 'jaxpr'):
+        # Jaxpr or ClosedJaxpr (also covers pallas GridMapping-wrapped
+        # jaxprs exposing .jaxpr)
+        inner = getattr(v, 'jaxpr', v)
+        return [inner] if hasattr(inner, 'eqns') else []
+    if isinstance(v, (tuple, list)):
+        out = []
+        for x in v:
+            out.extend(_collect_jaxprs(x))
+        return out
+    return []
+
+
+def _is_host_sync(prim_name: str) -> bool:
+    if prim_name in _HOST_SYNC_EXACT:
+        return True
+    return any(s in prim_name for s in _HOST_SYNC_SUBSTR)
+
+
+def host_sync_pass(entry: str, closed_jaxpr) -> List[Finding]:
+    """Flag any host-round-trip primitive reachable from the entry point.
+
+    A callback inside a scan/while body (``host-callback-hot``) stalls
+    every loop trip — the exact regression the device-loop PRs removed;
+    one outside a loop (``host-callback``) still syncs once per step.
+    Both are errors: jitted hot paths must be host-free.
+    """
+    findings = []
+    for eqn, depth in iter_eqns(closed_jaxpr):
+        name = eqn.primitive.name
+        if not _is_host_sync(name):
+            continue
+        hot = depth > 0
+        findings.append(Finding(
+            pass_name=PASS_HOST_SYNC,
+            code='host-callback-hot' if hot else 'host-callback',
+            entry=entry,
+            message=(f'host-sync primitive {name!r} '
+                     + ('inside a scanned hot body (stalls every trip)'
+                        if hot else 'in the jitted entry (syncs per call)')),
+            detail=dict(primitive=name, loop_depth=depth)))
+    return findings
+
+
+def dtype_pass(entry: str, closed_jaxpr, allow_f64: bool = False,
+               mxu_dtype: str | None = None) -> List[Finding]:
+    """Walk ``convert_element_type`` edges and equation outputs for
+    precision-policy violations:
+
+    - ``f64-upcast``: a narrow float (f16/bf16/f32) converted *up* to
+      f64 — the classic accidental promotion from a strong-typed numpy
+      f64 table or ``np.float64`` literal (doubles bytes AND halves MXU
+      rate).  Skipped when the entry's policy declares ``allow_f64``
+      (the jnp oracle pipelines compute in f64 on purpose).
+    - ``bf16-leak``: any bf16-dtyped equation output in an entry whose
+      policy declares no ``mxu_dtype`` — low precision must be an
+      explicit per-kernel choice, never an accident.
+
+    Repeated identical violations are folded into one finding per
+    (code, primitive, shape) with a count, so a vmapped/scanned body
+    doesn't drown the report.
+    """
+    upcasts: Counter = Counter()
+    upcast_detail = {}
+    bf16: Counter = Counter()
+    bf16_detail = {}
+    for eqn, depth in iter_eqns(closed_jaxpr):
+        if not allow_f64 and eqn.primitive.name == 'convert_element_type':
+            src = _aval_dtype(eqn.invars[0])
+            dst = _aval_dtype(eqn.outvars[0])
+            if src in _FLOAT_NARROW and dst == 'float64':
+                key = (src, tuple(_aval_shape(eqn.outvars[0])))
+                upcasts[key] += 1
+                upcast_detail.setdefault(key, depth)
+        if mxu_dtype is None:
+            for ov in eqn.outvars:
+                if _aval_dtype(ov) == 'bfloat16':
+                    key = (eqn.primitive.name,
+                           tuple(_aval_shape(ov)))
+                    bf16[key] += 1
+                    bf16_detail.setdefault(key, depth)
+    findings = []
+    for (src, shape), n in sorted(upcasts.items(), key=str):
+        findings.append(Finding(
+            pass_name=PASS_DTYPE, code='f64-upcast', entry=entry,
+            message=(f'{src} -> float64 upcast on shape {list(shape)}'
+                     f' (x{n}) — strong-typed f64 constant or table '
+                     f'leaking into a narrow-precision pipeline'),
+            detail=dict(src=src, shape=list(shape), count=n,
+                        loop_depth=upcast_detail[(src, shape)])))
+    for (prim, shape), n in sorted(bf16.items(), key=str):
+        findings.append(Finding(
+            pass_name=PASS_DTYPE, code='bf16-leak', entry=entry,
+            message=(f'bf16 output of {prim!r} on shape {list(shape)} '
+                     f'(x{n}) outside a declared mxu_dtype policy'),
+            detail=dict(primitive=prim, shape=list(shape), count=n,
+                        loop_depth=bf16_detail[(prim, shape)])))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# retrace surface
+# ---------------------------------------------------------------------------
+
+def abstract_signature(args) -> Tuple:
+    """Hashable abstract signature of an argument tuple: per-leaf
+    (shape, dtype, weak_type) — exactly what the jit cache keys on for
+    array arguments."""
+    structs = jax.eval_shape(lambda *a: a, *args)
+    leaves = jax.tree_util.tree_leaves(structs)
+    return tuple((tuple(x.shape), str(x.dtype),
+                  bool(getattr(x, 'weak_type', False))) for x in leaves)
+
+
+def retrace_pass(entry: str, sig_a: Tuple, sig_b: Tuple,
+                 static_args=None, counter=None,
+                 expected_compiles: int = 1,
+                 executed: bool = False) -> List[Finding]:
+    """The jit-cache-fission lint.
+
+    ``sig_a``/``sig_b`` are :func:`abstract_signature` results from two
+    *independent* builds of the entry's example inputs — any drift
+    (weak-type flips, dtype wobble from an unpinned numpy default,
+    shape jitter) means production traffic would fission the cache and
+    recompile per call.  ``static_args`` are checked for hashability
+    (an unhashable static argument retraces every call).  When the
+    runner has ``executed`` the entry on both builds, ``counter`` holds
+    the live trace count and must equal ``expected_compiles``.
+    """
+    findings = []
+    if sig_a != sig_b:
+        drift = [dict(index=i, a=list(a), b=list(b))
+                 for i, (a, b) in enumerate(zip(sig_a, sig_b)) if a != b]
+        if len(sig_a) != len(sig_b):
+            drift.append(dict(index='arity', a=len(sig_a), b=len(sig_b)))
+        findings.append(Finding(
+            pass_name=PASS_RETRACE, code='signature-drift', entry=entry,
+            message=('abstract signature differs between two builds of '
+                     'the example inputs — every call would retrace'),
+            detail=dict(drift=drift[:8])))
+    for i, (shape, dtype, weak) in enumerate(sig_a):
+        if weak:
+            findings.append(Finding(
+                pass_name=PASS_RETRACE, code='weak-type-arg', entry=entry,
+                message=(f'argument leaf {i} is weak-typed ({dtype}) — a '
+                         f'Python scalar reached the jit boundary; mixing '
+                         f'it with strong-typed callers fissions the '
+                         f'cache'),
+                detail=dict(leaf=i, shape=list(shape), dtype=dtype)))
+    for name, val in (static_args or {}).items():
+        try:
+            hash(val)
+        except TypeError:
+            findings.append(Finding(
+                pass_name=PASS_RETRACE, code='unhashable-static',
+                entry=entry,
+                message=(f'static argument {name!r} of type '
+                         f'{type(val).__name__} is unhashable — jit '
+                         f'falls back to retracing per call'),
+                detail=dict(arg=name, type=type(val).__name__)))
+    if executed:
+        got = trace_count(counter)
+        if got != expected_compiles:
+            findings.append(Finding(
+                pass_name=PASS_RETRACE, code='cache-fission', entry=entry,
+                message=(f'{got} trace(s) across two same-signature calls '
+                         f'(expected {expected_compiles}) — the jit cache '
+                         f'fissioned'),
+                detail=dict(traces=got, expected=expected_compiles)))
+    return findings
+
+
+def _aval_dtype(var) -> str:
+    aval = getattr(var, 'aval', None)
+    dt = getattr(aval, 'dtype', None)
+    return str(dt) if dt is not None else ''
+
+
+def _aval_shape(var):
+    aval = getattr(var, 'aval', None)
+    return tuple(getattr(aval, 'shape', ()) or ())

@@ -1,0 +1,316 @@
+"""Central registry of the pipeline's jitted entry points.
+
+Every hot path the repo has earned a structural invariant for — the
+kernel/jnp force pipelines (half and full plane layouts, the bf16 MXU
+feed), the device-loop MD chunk, the serving bucket step, and (when >= 2
+devices are visible) the atom-sharded path — is registered here with:
+
+- a ``build(seed)`` factory returning the jitted fn + example inputs +
+  a live trace counter (two independent builds must agree abstractly —
+  the retrace-surface lint's input);
+- a :class:`DtypePolicy` declaring what precision is deliberate;
+- padded-vs-logical extents for the padding-waste analyzer;
+- plane rows for the HBM plane-traffic metric (budget-ratcheted);
+- an explicit allowlist for findings that are understood and accepted.
+
+``python -m repro.analysis`` runs every pass over every entry; CI fails
+on any unallowlisted finding or budget regression, so a future PR cannot
+silently reintroduce a host sync, a retrace surface, an f64 leak, or a
+padding blow-up on any registered path.  Register new jitted entry
+points here (see DESIGN.md "Static analysis contract").
+
+Sizes are deliberately small (2J=2, one 128-lane block) — the passes
+check *structure*, which is size-independent, and the whole registry
+must stay cheap enough for a per-PR CI job.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+TWOJMAX = 2
+RCUT = 3.0
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """What precision an entry point is *allowed* to touch.
+
+    ``allow_f64``: the jnp oracle pipelines compute in f64 on purpose;
+    kernel pipelines must never upcast to it.  ``mxu_dtype``: set (e.g.
+    ``'bfloat16'``) when low-precision MXU operands are a declared
+    choice; otherwise any bf16 value is a leak.
+    """
+    allow_f64: bool = False
+    mxu_dtype: Optional[str] = None
+
+
+@dataclass
+class Built:
+    """One concrete build of an entry point: the jitted callable, its
+    example inputs, and the trace counter the callable bumps."""
+    fn: Callable
+    args: Tuple
+    counter: Dict
+
+
+@dataclass
+class EntryPoint:
+    name: str
+    build: Callable[[int], Built]
+    policy: DtypePolicy = field(default_factory=DtypePolicy)
+    static_args: Dict = field(default_factory=dict)
+    pad_dims: Dict[int, int] = field(default_factory=dict)
+    plane_rows: Tuple[int, ...] = ()
+    lane_cols: Tuple[int, ...] = (128,)
+    allow: FrozenSet[str] = frozenset()
+    expected_compiles: int = 1
+    broadcast_bytes_limit: int = 1 << 21       # 2 MiB
+    pad_waste_limit: float = 0.5
+    description: str = ''
+
+
+# ---------------------------------------------------------------------------
+# shared example-input builders
+# ---------------------------------------------------------------------------
+
+def _force_inputs(seed: int, dtype, natoms: int = 120, max_nbors: int = 16):
+    """Deterministic periodic W cluster + padded host neighbor lists.
+
+    120 of 128 bcc sites (8 vacancies) so the 128-lane pad carries real,
+    representative padding waste.
+    """
+    import jax.numpy as jnp
+
+    from repro.md.lattice import paper_box, perturb
+    from repro.md.neighbor import brute_neighbors
+
+    pos, box = paper_box(natoms=128)
+    pos = perturb(pos, 0.02, seed=seed)[:natoms]
+    nbr_idx, mask, disp, _ = brute_neighbors(pos, box, RCUT, max_nbors)
+    return (jnp.asarray(disp[..., 0], dtype),
+            jnp.asarray(disp[..., 1], dtype),
+            jnp.asarray(disp[..., 2], dtype),
+            jnp.asarray(nbr_idx), jnp.asarray(mask))
+
+
+def _beta(seed: int, dtype, cfg):
+    import jax.numpy as jnp
+    b = np.random.default_rng(100 + seed).normal(size=cfg.ncoeff) * 5e-3
+    return jnp.asarray(b, dtype)
+
+
+def _kernel_entry(layout: str, mxu_dtype=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.snap import SnapConfig
+    from repro.kernels.ops import snap_force_pipeline
+
+    from .retrace import record_trace
+
+    def build(seed: int) -> Built:
+        cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+        counter: Dict = {}
+        mxu = jnp.bfloat16 if mxu_dtype == 'bfloat16' else None
+
+        @jax.jit
+        def fn(beta, dx, dy, dz, nbr_idx, mask):
+            record_trace(counter)
+            return snap_force_pipeline(
+                cfg, beta, 0.0, dx, dy, dz, nbr_idx, mask,
+                dtype=jnp.float32, interpret=True, layout=layout,
+                mxu_dtype=mxu)
+
+        args = (_beta(seed, jnp.float32, cfg),
+                *_force_inputs(seed, jnp.float32))
+        return Built(fn, args, counter)
+    return build
+
+
+def _jnp_entry(impl: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.snap import SnapConfig, energy_forces
+
+    from .retrace import record_trace
+
+    def build(seed: int) -> Built:
+        cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+        counter: Dict = {}
+
+        @jax.jit
+        def fn(beta, dx, dy, dz, nbr_idx, mask):
+            record_trace(counter)
+            return energy_forces(cfg, beta, 0.0, dx, dy, dz, nbr_idx,
+                                 mask, impl=impl)
+
+        args = (_beta(seed, jnp.float64, cfg),
+                *_force_inputs(seed, jnp.float64))
+        return Built(fn, args, counter)
+    return build
+
+
+def _md_chunk_entry():
+    import jax.numpy as jnp
+
+    from repro.core.snap import SnapConfig
+    from repro.md.cell_list import (N_FLAGS, auto_cell_cap, jitted_build,
+                                    make_grid)
+    from repro.md.integrate import (W_MASS, init_velocities,
+                                    make_device_chunk_fn)
+    from repro.md.lattice import paper_box, perturb
+
+    def build(seed: int) -> Built:
+        cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+        pos, box = paper_box(natoms=54)
+        pos = perturb(pos, 0.02, seed=seed)
+        skin = 0.4
+        rb = cfg.rcut + skin
+        k_build = int(np.ceil(16 * (rb / cfg.rcut) ** 3 / 4.0)) * 4
+        grid = make_grid(box, cfg.rcut, skin,
+                         auto_cell_cap(pos, box, rb), k_build)
+        counter: Dict = {}
+        chunk = make_device_chunk_fn(
+            cfg, _beta(seed, jnp.float64, cfg), 0.0, dt=5e-4, mass=W_MASS,
+            grid=grid, impl='adjoint', n_sub=3, trace_counter=counter)
+        posj = jnp.asarray(pos)
+        boxj = jnp.asarray(np.asarray(box, np.float64))
+        nbr_idx, mask, shifts, fl = jitted_build(grid)(posj, boxj)
+        flags = jnp.zeros(N_FLAGS, jnp.int32).at[:2].set(
+            jnp.asarray(fl, jnp.int32))
+        vel = jnp.asarray(init_velocities(54, 300.0, seed=seed))
+        args = (posj, vel, jnp.zeros_like(posj), boxj, nbr_idx, shifts,
+                mask, posj, flags, jnp.float64(0.0))
+        return Built(chunk, args, counter)
+    return build
+
+
+def _serve_entry():
+    import jax.numpy as jnp
+
+    from repro.core.snap import SnapConfig
+    from repro.kernels.ops import make_batched_force_fn
+
+    N_PAD, MAX_NBORS, BATCH = 16, 14, 2
+
+    def build(seed: int) -> Built:
+        cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+        counter: Dict = {}
+        fn = make_batched_force_fn(cfg, N_PAD, MAX_NBORS, impl='kernel',
+                                   dtype=jnp.float32, interpret=True,
+                                   trace_counter=counter)
+        rng = np.random.default_rng(200 + seed)
+        n_valid = np.array([12, 14], np.int32)
+        pos = np.zeros((BATCH, N_PAD, 3), np.float32)
+        for i, n in enumerate(n_valid):
+            pos[i, :n] = rng.uniform(0.0, 7.0, (n, 3))
+        box = np.full((BATCH, 3), 7.0, np.float32)
+        beta = np.stack([np.asarray(_beta(seed + i, jnp.float32, cfg))
+                         for i in range(BATCH)])
+        args = (jnp.asarray(pos), jnp.asarray(box), jnp.asarray(beta),
+                jnp.zeros(BATCH, jnp.float32), jnp.asarray(n_valid))
+        return Built(fn, args, counter)
+    return build
+
+
+def _sharded_entry(n_shards: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.snap import SnapConfig
+    from repro.kernels.ops import make_sharded_force_fn
+    from repro.launch.sharding import make_atom_mesh
+
+    from .retrace import record_trace
+
+    def build(seed: int) -> Built:
+        cfg = SnapConfig(twojmax=TWOJMAX, rcut=RCUT)
+        counter: Dict = {}
+        beta = _beta(seed, jnp.float64, cfg)
+        sharded = make_sharded_force_fn(cfg, beta, 0.0,
+                                        make_atom_mesh(n_shards),
+                                        impl='adjoint')
+
+        @jax.jit
+        def fn(dx, dy, dz, nbr_idx, mask):
+            record_trace(counter)
+            return sharded(dx, dy, dz, nbr_idx, mask)
+
+        args = _force_inputs(seed, jnp.float64, natoms=128)
+        return Built(fn, args, counter)
+    return build
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+def default_registry() -> List[EntryPoint]:
+    """Every registered jitted entry point, cheapest first.
+
+    The atom-sharded path registers only when >= 2 devices are visible
+    (CI forces 2 host devices for the static-analysis job the way the
+    bench job does); its budgets entry is then live too.
+    """
+    import jax
+
+    from repro.core.snap import SnapConfig
+    idx = SnapConfig(twojmax=TWOJMAX, rcut=RCUT).index
+    plane_rows = (idx.idxu_max, idx.idxu_half_max)
+    kernel_pads = {128: 120}        # natoms=120 on the 128-lane axis
+
+    entries = [
+        EntryPoint(
+            name='force.jnp.adjoint', build=_jnp_entry('adjoint'),
+            policy=DtypePolicy(allow_f64=True),
+            description='paper Sec. IV adjoint pipeline (f64 oracle)'),
+        EntryPoint(
+            name='force.jnp.baseline', build=_jnp_entry('baseline'),
+            policy=DtypePolicy(allow_f64=True),
+            description='pre-paper baseline (Z + dB materialized)'),
+        EntryPoint(
+            name='force.kernel.half', build=_kernel_entry('half'),
+            policy=DtypePolicy(),
+            pad_dims=kernel_pads, plane_rows=plane_rows,
+            pad_waste_limit=0.25,
+            description='Pallas U->Y->dE, half-plane layout (default)'),
+        EntryPoint(
+            name='force.kernel.full', build=_kernel_entry('full'),
+            policy=DtypePolicy(),
+            pad_dims=kernel_pads, plane_rows=plane_rows,
+            pad_waste_limit=0.25,
+            description='Pallas pipeline, full-plane A/B layout'),
+        EntryPoint(
+            name='force.kernel.half.bf16',
+            build=_kernel_entry('half', mxu_dtype='bfloat16'),
+            policy=DtypePolicy(mxu_dtype='bfloat16'),
+            pad_dims=kernel_pads, plane_rows=plane_rows,
+            pad_waste_limit=0.25,
+            description='half-plane pipeline with the bf16 MXU feed'),
+        EntryPoint(
+            name='md.device_chunk', build=_md_chunk_entry(),
+            policy=DtypePolicy(allow_f64=True),
+            description='device-loop MD chunk (in-scan rebuilds, n_sub=3)'),
+        EntryPoint(
+            name='serve.bucket_step', build=_serve_entry(),
+            policy=DtypePolicy(),
+            # a 16-atom bucket on a 128-lane kernel: the lane-granularity
+            # padding tax is real and visible (~7/8); the budget ratchet
+            # holds it, the limit documents it
+            pad_dims={128: 16}, plane_rows=plane_rows,
+            pad_waste_limit=0.95,
+            description='vmapped serving bucket step (B=2, n_pad=16)'),
+    ]
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        entries.append(EntryPoint(
+            name='force.jnp.sharded', build=_sharded_entry(2),
+            policy=DtypePolicy(allow_f64=True),
+            description='atom-sharded shard_map pipeline '
+                        '(psum_scatter force assembly, 2 shards)'))
+    return entries

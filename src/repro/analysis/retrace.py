@@ -1,0 +1,48 @@
+"""Shared retrace/compile accounting for jitted entry points.
+
+Every hot path in this repo proves its compile count is structurally
+bounded (device MD chunks, serving bucket fns, analysis entry points).
+Before this module each path grew its own ad-hoc counter dict with the
+same three lines of bookkeeping; they all count the same way now, so the
+static-analysis retrace pass and the scattered trace-count tests agree
+by construction.
+
+The counter is a plain ``dict`` on purpose: it predates this module as
+the ``fn_cache['device_trace_count']`` idiom, it pickles, and existing
+tests assert on ``counter['traces']`` directly.  ``record_trace`` is
+called from *inside* the traced Python function, so it fires exactly
+once per (re)trace and never at cache hits.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+TRACE_KEY = 'traces'
+
+
+def record_trace(counter: Optional[Dict]) -> int:
+    """Bump ``counter['traces']`` (no-op on None).  Call from inside the
+    to-be-jitted Python callable; returns the new count."""
+    if counter is None:
+        return 0
+    counter[TRACE_KEY] = counter.get(TRACE_KEY, 0) + 1
+    return counter[TRACE_KEY]
+
+
+def trace_count(counter: Optional[Dict]) -> int:
+    """The number of traces recorded so far (0 for None / fresh dicts)."""
+    if counter is None:
+        return 0
+    return int(counter.get(TRACE_KEY, 0))
+
+
+def assert_trace_count(counter: Optional[Dict], expect: int,
+                       what: str = 'entry point') -> None:
+    """Typed assertion used by tests and the analysis runner."""
+    got = trace_count(counter)
+    if got != expect:
+        raise AssertionError(
+            f'{what}: expected {expect} trace(s), counted {got} — the jit '
+            f'cache fissioned (shape/dtype/weak-type drift or an unhashable '
+            f'static argument)')

@@ -1,0 +1,120 @@
+"""Drive every static-analysis pass over every registered entry point.
+
+Per entry the runner:
+
+1. builds the entry twice with independent seeds (two :class:`Built`
+   instances — fn, example args, trace counter);
+2. executes build A's fn on both builds' args and reads the live trace
+   counter (the compile-count ground truth for the retrace lint and the
+   ``compile_count`` budget) — execution happens *before* any
+   ``make_jaxpr``/``lower`` call, which would bump the counter again;
+3. runs the retrace-surface lint on the two abstract signatures;
+4. traces a closed jaxpr and runs the host-sync and dtype passes;
+5. lowers to optimized HLO text and runs the memory pass through
+   :class:`repro.launch.hlo_cost.HloCost`;
+6. splits findings into active vs allowlisted.
+
+Budget checking is a whole-report concern and happens in
+:func:`run_registry` after all entries complete.
+"""
+
+from __future__ import annotations
+
+import traceback
+from typing import Dict, Iterable, List, Optional
+
+import jax
+
+from .budgets import check_budgets
+from .findings import EntryReport, Finding, Report, SEV_ERROR
+from .hlo_passes import memory_pass
+from .jaxpr_passes import (abstract_signature, dtype_pass, host_sync_pass,
+                           retrace_pass)
+from .registry import EntryPoint
+from .retrace import trace_count
+
+
+def analyze_entry(ep: EntryPoint, execute: bool = True) -> EntryReport:
+    """Run all per-entry passes; never raises — an analysis crash becomes
+    an ``analysis-error`` finding so one broken entry can't hide the
+    rest of the report."""
+    try:
+        return _analyze(ep, execute)
+    except Exception as exc:                      # pragma: no cover
+        return EntryReport(entry=ep.name, findings=[Finding(
+            pass_name='runner', code='analysis-error', entry=ep.name,
+            message=f'analysis crashed: {type(exc).__name__}: {exc}',
+            detail=dict(traceback=traceback.format_exc(limit=8)))])
+
+
+def _analyze(ep: EntryPoint, execute: bool) -> EntryReport:
+    built_a = ep.build(0)
+    built_b = ep.build(1)
+    metrics: Dict[str, float] = {}
+
+    compiles = 0
+    if execute:
+        out = built_a.fn(*built_a.args)
+        jax.block_until_ready(out)
+        out = built_a.fn(*built_b.args)
+        jax.block_until_ready(out)
+        compiles = trace_count(built_a.counter)
+        metrics['compile_count'] = compiles
+
+    findings: List[Finding] = []
+    findings += retrace_pass(
+        ep.name,
+        abstract_signature(built_a.args),
+        abstract_signature(built_b.args),
+        static_args=ep.static_args,
+        counter=built_a.counter,
+        expected_compiles=ep.expected_compiles,
+        executed=execute)
+
+    closed = jax.make_jaxpr(built_a.fn)(*built_a.args)
+    findings += host_sync_pass(ep.name, closed)
+    findings += dtype_pass(ep.name, closed,
+                           allow_f64=ep.policy.allow_f64,
+                           mxu_dtype=ep.policy.mxu_dtype)
+
+    from repro.launch.hlo_cost import HloCost
+    text = (jax.jit(built_a.fn).lower(*built_a.args)
+            .compile().as_text())
+    mem_findings, mem_metrics = memory_pass(
+        ep.name, HloCost(text),
+        pad_dims=ep.pad_dims,
+        broadcast_bytes_limit=ep.broadcast_bytes_limit,
+        pad_waste_limit=ep.pad_waste_limit,
+        plane_rows=ep.plane_rows, lane_cols=ep.lane_cols)
+    findings += mem_findings
+    metrics.update(mem_metrics)
+
+    active, suppressed = [], []
+    for f in findings:
+        if any(k in ep.allow for k in f.allow_keys()):
+            suppressed.append(f)
+        else:
+            active.append(f)
+    return EntryReport(entry=ep.name, findings=active,
+                       suppressed=suppressed, metrics=metrics)
+
+
+def run_registry(entries: Iterable[EntryPoint],
+                 budgets: Optional[Dict] = None,
+                 execute: bool = True,
+                 progress=None) -> Report:
+    """Analyze every entry, then (optionally) apply the budget ratchet."""
+    report = Report(meta=dict(
+        jax_version=jax.__version__,
+        backend=jax.default_backend(),
+        n_devices=len(jax.devices()),
+    ))
+    for ep in entries:
+        if progress:
+            progress(ep.name)
+        report.entries.append(analyze_entry(ep, execute=execute))
+    if budgets is not None:
+        report.budget_findings = check_budgets(report, budgets)
+    report.meta['n_findings'] = sum(
+        1 for f in report.all_findings() if f.severity == SEV_ERROR)
+    return report

@@ -29,6 +29,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import record_trace
 from repro.core.geometry import sanitize_displacements
 from repro.core.snap import SnapConfig, assemble_forces, bzero_shift
 
@@ -270,8 +271,7 @@ def make_batched_force_fn(cfg: SnapConfig, n_pad: int, max_nbors: int,
         return e, f, flags
 
     def batched(pos, box, beta, beta0, n_valid):
-        if trace_counter is not None:
-            trace_counter['traces'] = trace_counter.get('traces', 0) + 1
+        record_trace(trace_counter)
         return jax.vmap(lane)(pos, box, beta, beta0, n_valid)
 
     return jax.jit(batched)

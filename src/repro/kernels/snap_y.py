@@ -118,8 +118,10 @@ def y_coef(beta, twojmax: int, tile: int = Y_TILE):
     """
     idx = build_index(twojmax)
     _, _, _, cg, jjz = _y_coo_tiles(twojmax, tile)
-    betaj = jnp.asarray(idx.y_fac) * beta[..., idx.y_jjb]
-    return jnp.asarray(cg) * betaj[..., jjz]
+    # cast the strong-typed f64 host tables to beta's dtype *before*
+    # multiplying: numpy f64 otherwise promotes an f32 beta to f64
+    betaj = jnp.asarray(idx.y_fac, beta.dtype) * beta[..., idx.y_jjb]
+    return jnp.asarray(cg, beta.dtype) * betaj[..., jjz]
 
 
 def snap_y_pallas(ut_r, ut_i, coef, *, twojmax, tile=Y_TILE, interpret=True):
@@ -235,8 +237,8 @@ def y_coef_half(beta, twojmax: int, tile: int = Y_TILE):
     inside ``cg_folded`` (``SnapIndex.z_half_cg``)."""
     idx = build_index(twojmax)
     _, _, _, _, _, cg, jjz = _y_half_coo_tiles(twojmax, tile)
-    betaj = jnp.asarray(idx.y_fac) * beta[..., idx.y_jjb]
-    return jnp.asarray(cg) * betaj[..., jjz]
+    betaj = jnp.asarray(idx.y_fac, beta.dtype) * beta[..., idx.y_jjb]
+    return jnp.asarray(cg, beta.dtype) * betaj[..., jjz]
 
 
 def snap_y_half_pallas(ut_r, ut_i, coef, *, twojmax, tile=Y_TILE,

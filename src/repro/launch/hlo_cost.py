@@ -248,6 +248,64 @@ class HloCost:
                     collectives=coll, collective_bytes=total_coll)
 
 
+    def materialized_broadcasts(self, min_bytes: int = 0) -> List[Dict]:
+        """Top-level ``broadcast`` instructions whose *result* is an
+        HBM-materialized tensor of at least ``min_bytes``.
+
+        Fusion-interior broadcasts are free (they re-materialize in
+        registers); a top-level one allocates and writes the full result
+        — the classic accidental ``jnp.broadcast_to``/rank-expansion
+        blow-up.  Returns one record per instruction with the
+        trip-count multiplier applied to ``total_bytes``.
+        """
+        fusion_bodies = self._fusion_bodies()
+        out = []
+        for name, lines in self.blocks.items():
+            k = self.mult.get(name, 0.0)
+            if k == 0.0 or name in fusion_bodies:
+                continue
+            for ln in lines:
+                if ' broadcast(' not in ln:
+                    continue
+                seg = ln.split('=', 1)
+                if len(seg) < 2:
+                    continue
+                rt = _TYPE_RE.search(seg[1].split('(', 1)[0])
+                if not rt:
+                    continue
+                nbytes = _shape_elems(rt.group(2)) \
+                    * _DTYPE_BYTES[rt.group(1)]
+                if nbytes < min_bytes:
+                    continue
+                dm = _DEF_RE.match(ln)
+                out.append(dict(
+                    block=name, instr=dm.group(1) if dm else '?',
+                    dtype=rt.group(1), dims=_dims_list(rt.group(2)),
+                    bytes=nbytes, mult=k, total_bytes=k * nbytes))
+        return sorted(out, key=lambda r: -r['total_bytes'])
+
+    def dot_summary(self) -> List[Dict]:
+        """Every reachable ``dot`` with its trip-count-weighted FLOPs and
+        result dims — the symbol-table input for padding-waste analysis
+        (which fraction of MXU work lands on padded lanes)."""
+        out = []
+        for name, lines in self.blocks.items():
+            k = self.mult.get(name, 0.0)
+            if k == 0.0:
+                continue
+            for ln in lines:
+                if ' dot(' not in ln:
+                    continue
+                flops = self._dot_flops(ln)
+                lhs = ln.split(' dot(', 1)[0]
+                if '=' in lhs:
+                    lhs = lhs.split('=', 1)[1]
+                rt = _TYPE_RE.search(lhs)
+                dims = _dims_list(rt.group(2)) if rt else []
+                out.append(dict(block=name, mult=k, flops=k * flops,
+                                result_dims=dims))
+        return out
+
     def plane_bytes(self, plane_rows, lane_cols=(128,),
                     loop_only=False) -> float:
         """Trip-count-weighted bytes moved through *plane-shaped* tensors:

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import trace_count
 from repro.core.snap import SnapConfig
 from repro.kernels.ops import make_batched_force_fn
 from repro.md.fault_inject import KernelPathFault
@@ -723,7 +724,7 @@ class ForceServer:
             deadline_missed=self._deadline_missed,
             retries_scheduled=self._retries_scheduled,
             degraded_steps=self._degraded_steps,
-            compile_counts={f'{bk}/{impl}': c.get('traces', 0)
+            compile_counts={f'{bk}/{impl}': trace_count(c)
                             for (bk, impl), c in
                             self._trace_counts.items()},
             kernel_faults=dict(self._kernel_faults),

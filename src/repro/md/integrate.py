@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import record_trace
 from repro.core.snap import SnapConfig, energy_forces
 from .cell_list import (FLAG_DRIFT, FLAG_ESCAPE, FLAG_NAN_FORCE,
                         FLAG_NAN_STATE, N_FLAGS, auto_cell_cap,
@@ -157,7 +158,7 @@ def make_device_chunk_fn(cfg: SnapConfig, beta, beta0, dt, mass, grid,
     @jax.jit
     def chunk(pos, vel, f, box, nbr_idx, shifts, mask, pos_ref, flags,
               e_ref):
-        counter['traces'] = counter.get('traces', 0) + 1
+        record_trace(counter)
 
         def step(carry, _):
             pos, vel, f, nbr_idx, shifts, mask, pos_ref, flags = carry

@@ -1,0 +1,354 @@
+"""Tests for the static-analysis suite (src/repro/analysis).
+
+Each of the five passes is exercised two ways: the seeded-violation
+entries below are registered through the *public* registry mechanism and
+driven through the real CLI (``python -m repro.analysis --registry
+<this file>:seeded_registry``), proving the end-to-end gate exits
+nonzero on every violation class; and the pass functions are unit-tested
+directly where the CLI would be needlessly slow.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.budgets import check_budgets, make_budgets
+from repro.analysis.registry import Built, DtypePolicy, EntryPoint
+from repro.analysis.retrace import (assert_trace_count, record_trace,
+                                    trace_count)
+from repro.analysis.runner import analyze_entry, run_registry
+
+from repro.analysis.__main__ import main as cli_main
+
+
+# ---------------------------------------------------------------------------
+# seeded-violation registry (loaded by the CLI via --registry file.py:attr)
+# ---------------------------------------------------------------------------
+
+def _host_sync_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+
+            def body(c, _):
+                jax.debug.print('hot {v}', v=c[0])   # the seeded violation
+                return c * 1.5, None
+            y, _ = jax.lax.scan(body, x, None, length=2)
+            return y
+        return Built(fn, (jnp.ones(4, jnp.float32),), counter)
+    return EntryPoint(name='seed.host_sync', build=build)
+
+
+def _drift_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+            return x * 2
+        # dtype depends on the build seed: the classic unpinned-default
+        # drift that fissions the jit cache in production
+        dt = jnp.float32 if seed == 0 else jnp.float64
+        return Built(fn, (jnp.ones(8, dt),), counter)
+    return EntryPoint(name='seed.drift', build=build)
+
+
+def _weak_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x, s):
+            record_trace(counter)
+            return x * s
+        # a bare Python float reaches the jit boundary -> weak-typed leaf
+        return Built(fn, (jnp.ones(8, jnp.float32), 2.0), counter)
+    return EntryPoint(name='seed.weak', build=build)
+
+
+def _unhashable_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+            return x + 1
+        return Built(fn, (jnp.ones(4, jnp.float32),), counter)
+    return EntryPoint(name='seed.unhashable', build=build,
+                      static_args={'grid': [1, 2, 3]})
+
+
+_F64_TABLE = np.linspace(0.0, 1.0, 16)          # strong-typed f64
+
+
+def _upcast_entry(allow=frozenset()):
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+            return x * jnp.asarray(_F64_TABLE)   # f32 * f64 -> upcast
+        return Built(fn, (jnp.ones(16, jnp.float32),), counter)
+    return EntryPoint(name='seed.upcast', build=build,
+                      policy=DtypePolicy(allow_f64=False), allow=allow)
+
+
+def _bf16_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+            return (x.astype(jnp.bfloat16) * 2).astype(jnp.float32)
+        return Built(fn, (jnp.ones(8, jnp.float32),), counter)
+    return EntryPoint(name='seed.bf16', build=build,
+                      policy=DtypePolicy(mxu_dtype=None))
+
+
+def _broadcast_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x):
+            record_trace(counter)
+            # 512*4096*4 = 8 MiB materialized at the ROOT
+            return jnp.broadcast_to(x[:, None], (512, 4096))
+        return Built(fn, (jnp.ones(512, jnp.float32),), counter)
+    return EntryPoint(name='seed.broadcast', build=build)
+
+
+def _padwaste_entry():
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x, w):
+            record_trace(counter)
+            return x @ w
+        return Built(fn, (jnp.ones((128, 64), jnp.float32),
+                          jnp.ones((64, 128), jnp.float32)), counter)
+    # both 128-extents declared 16 logical -> 98.4% of FLOPs padded
+    return EntryPoint(name='seed.padwaste', build=build,
+                      pad_dims={128: 16}, pad_waste_limit=0.5)
+
+
+def _clean_entry(name='seed.clean'):
+    def build(seed):
+        counter = {}
+
+        @jax.jit
+        def fn(x, w):
+            record_trace(counter)
+            return jnp.tanh(x @ w)
+        return Built(fn, (jnp.ones((8, 16), jnp.float32),
+                          jnp.ones((16, 8), jnp.float32)), counter)
+    return EntryPoint(name=name, build=build)
+
+
+def seeded_registry():
+    return [_host_sync_entry(), _drift_entry(), _weak_entry(),
+            _unhashable_entry(), _upcast_entry(), _bf16_entry(),
+            _broadcast_entry(), _padwaste_entry(), _clean_entry()]
+
+
+def _codes(report_entry):
+    return {f.code for f in report_entry.findings}
+
+
+# ---------------------------------------------------------------------------
+# pass-level: each seeded violation yields its specific finding code
+# ---------------------------------------------------------------------------
+
+def test_host_sync_detects_callback_in_hot_body():
+    er = analyze_entry(_host_sync_entry(), execute=False)
+    assert 'host-callback-hot' in _codes(er), [str(f) for f in er.findings]
+
+
+def test_retrace_detects_signature_drift_and_fission():
+    er = analyze_entry(_drift_entry(), execute=True)
+    codes = _codes(er)
+    assert 'signature-drift' in codes
+    assert 'cache-fission' in codes          # 2 live traces counted
+    assert er.metrics['compile_count'] == 2
+
+
+def test_retrace_detects_weak_typed_arg():
+    er = analyze_entry(_weak_entry(), execute=False)
+    assert 'weak-type-arg' in _codes(er)
+
+
+def test_retrace_detects_unhashable_static_arg():
+    er = analyze_entry(_unhashable_entry(), execute=False)
+    assert 'unhashable-static' in _codes(er)
+
+
+def test_dtype_detects_f64_upcast():
+    er = analyze_entry(_upcast_entry(), execute=False)
+    assert 'f64-upcast' in _codes(er)
+
+
+def test_dtype_allowlist_suppresses():
+    er = analyze_entry(_upcast_entry(allow=frozenset({'f64-upcast'})),
+                       execute=False)
+    assert 'f64-upcast' not in _codes(er)
+    assert any(f.code == 'f64-upcast' for f in er.suppressed)
+
+
+def test_dtype_detects_bf16_leak():
+    er = analyze_entry(_bf16_entry(), execute=False)
+    assert 'bf16-leak' in _codes(er)
+
+
+def test_memory_detects_materialized_broadcast():
+    er = analyze_entry(_broadcast_entry(), execute=False)
+    assert 'materialized-broadcast' in _codes(er)
+    assert er.metrics['broadcast_bytes_max'] >= 512 * 4096 * 4
+
+
+def test_memory_detects_pad_waste():
+    er = analyze_entry(_padwaste_entry(), execute=False)
+    assert 'pad-waste' in _codes(er)
+    assert er.metrics['pad_waste_frac'] > 0.9
+
+
+def test_clean_entry_is_clean():
+    er = analyze_entry(_clean_entry(), execute=True)
+    assert er.findings == [], [str(f) for f in er.findings]
+    assert er.metrics['compile_count'] == 1
+
+
+# ---------------------------------------------------------------------------
+# budgets
+# ---------------------------------------------------------------------------
+
+def test_budget_roundtrip_and_regression():
+    report = run_registry([_clean_entry()], execute=True)
+    budgets = make_budgets(report)
+    assert check_budgets(report, budgets) == []
+
+    tight = json.loads(json.dumps(budgets))
+    tight['entries']['seed.clean']['compile_count'] = 0
+    findings = check_budgets(report, tight)
+    assert any(f.code == 'over-budget' for f in findings)
+
+
+def test_budget_unbudgeted_and_not_run():
+    report = run_registry([_clean_entry()], execute=False)
+    findings = check_budgets(report, {'entries': {'seed.other': {}}})
+    codes = {f.code for f in findings}
+    assert 'unbudgeted-entry' in codes
+    assert 'entry-not-run' in codes
+    # entry-not-run is a warning, unbudgeted is an error
+    sev = {f.code: f.severity for f in findings}
+    assert sev['entry-not-run'] == 'warn'
+    assert sev['unbudgeted-entry'] == 'error'
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end: nonzero exit on each seeded violation class
+# ---------------------------------------------------------------------------
+
+_REG = f'{__file__}:seeded_registry'
+
+
+@pytest.mark.parametrize('entry', [
+    'seed.host_sync',       # pass (a) host sync
+    'seed.drift',           # pass (b) retrace surface
+    'seed.upcast',          # pass (c) dtype drift
+    'seed.broadcast',       # pass (d) broadcast materialization
+    'seed.padwaste',        # pass (d) padding waste
+])
+def test_cli_exits_nonzero_on_seeded_violation(entry, capsys):
+    rc = cli_main(['--registry', _REG, '--entry', entry,
+                   '--budgets', 'none', '--no-execute'])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert entry in out
+
+
+def test_cli_exits_nonzero_on_budget_violation(tmp_path, capsys):
+    budgets = tmp_path / 'budgets.json'
+    budgets.write_text(json.dumps(
+        {'entries': {'seed.clean': {'compile_count': 0}}}))
+    rc = cli_main(['--registry', _REG, '--entry', 'seed.clean',
+                   '--budgets', str(budgets)])
+    assert rc == 1
+    assert 'over-budget' in capsys.readouterr().out
+
+
+def test_cli_clean_entry_exits_zero(tmp_path, capsys):
+    budgets = tmp_path / 'budgets.json'
+    rc = cli_main(['--registry', _REG, '--entry', 'seed.clean',
+                   '--budgets', str(budgets), '--write-budgets'])
+    assert rc == 0
+    # the budgets it wrote immediately pass
+    rc = cli_main(['--registry', _REG, '--entry', 'seed.clean',
+                   '--budgets', str(budgets)])
+    assert rc == 0
+
+
+def test_cli_json_report(tmp_path, capsys):
+    out = tmp_path / 'report.json'
+    rc = cli_main(['--registry', _REG, '--entry', 'seed.upcast',
+                   '--budgets', 'none', '--no-execute',
+                   '--json', str(out)])
+    assert rc == 1
+    doc = json.loads(out.read_text())
+    assert doc['ok'] is False
+    codes = {f['code'] for e in doc['entries'] for f in e['findings']}
+    assert 'f64-upcast' in codes
+
+
+# ---------------------------------------------------------------------------
+# the real registry
+# ---------------------------------------------------------------------------
+
+def test_default_registry_covers_required_entry_points():
+    from repro.analysis.registry import default_registry
+    names = {ep.name for ep in default_registry()}
+    required = {'force.kernel.half', 'force.kernel.full',
+                'force.kernel.half.bf16', 'force.jnp.adjoint',
+                'force.jnp.baseline', 'md.device_chunk',
+                'serve.bucket_step'}
+    assert required <= names
+    assert len(names) >= 6
+
+
+def test_checked_in_budgets_cover_registry(repo_root=None):
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, 'ANALYSIS_BUDGETS.json')
+    assert os.path.exists(path), 'ANALYSIS_BUDGETS.json must be checked in'
+    doc = json.loads(open(path).read())
+    from repro.analysis.registry import default_registry
+    budgeted = set(doc['entries'])
+    for ep in default_registry():
+        assert ep.name in budgeted, f'{ep.name} missing from budgets'
+
+
+# ---------------------------------------------------------------------------
+# retrace helper (the shared counter the satellites now use)
+# ---------------------------------------------------------------------------
+
+def test_record_trace_helper():
+    c = {}
+    assert trace_count(c) == 0
+    assert record_trace(c) == 1
+    assert record_trace(c) == 2
+    assert trace_count(c) == 2
+    assert record_trace(None) == 0      # no-op without a counter
+    assert trace_count(None) == 0
+    assert_trace_count(c, 2)
+    with pytest.raises(AssertionError):
+        assert_trace_count(c, 1, what='seed')

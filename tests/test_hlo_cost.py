@@ -76,3 +76,118 @@ def test_collective_bytes_zero_on_single_device():
     compiled = _compile(lambda a: a @ a, a)
     got = analyze_hlo(compiled.as_text())
     assert got['collective_bytes'] == 0
+
+
+def test_zero_trip_scan_end_to_end():
+    """length=0 scans must not crash the parser or contribute FLOPs."""
+    w = jnp.zeros((16, 16), jnp.float32)
+    x = jnp.zeros((4, 16), jnp.float32)
+
+    def fn(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=0)
+        return h
+
+    got = analyze_hlo(_compile(fn, x, w).as_text())
+    assert got['flops_dot'] == 0
+    assert got['collective_bytes'] == 0
+
+
+_ZERO_TRIP_HLO = """
+HloModule zero_trip
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,4]) %p), index=0
+  %c = s32[] constant(0)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %m = f32[4,4] get-tuple-element((s32[], f32[4,4]) %p), index=1
+  %d = f32[4,4] dot(f32[4,4] %m, f32[4,4] %m), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element((s32[], f32[4,4]) %p), index=0
+  ROOT %t = (s32[], f32[4,4]) tuple(s32[] %i, f32[4,4] %d)
+}
+
+ENTRY %main (x: f32[4,4]) -> (s32[], f32[4,4]) {
+  %x = f32[4,4] parameter(0)
+  %z = s32[] constant(0)
+  %t = (s32[], f32[4,4]) tuple(s32[] %z, f32[4,4] %x)
+  ROOT %w = (s32[], f32[4,4]) while((s32[], f32[4,4]) %t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"0"}}
+}
+"""
+
+
+def test_zero_trip_while_multiplier_is_zero():
+    """A while with known_trip_count n=0 zeroes out its body's work
+    instead of defaulting the multiplier to 1."""
+    from repro.launch.hlo_cost import HloCost
+    hc = HloCost(_ZERO_TRIP_HLO)
+    assert hc.mult.get('body', 0.0) == 0.0
+    assert hc.totals()['flops_dot'] == 0
+
+
+_PALLAS_CC_HLO = """
+HloModule pallas_custom_call
+
+%pallas_body (a: f32[14,128]) -> f32[14,128] {
+  %a = f32[14,128] parameter(0)
+  ROOT %r = f32[14,128] add(f32[14,128] %a, f32[14,128] %a)
+}
+
+ENTRY %main (x: f32[14,128]) -> f32[14,128] {
+  %x = f32[14,128] parameter(0)
+  ROOT %cc = f32[14,128] custom-call(f32[14,128] %x), custom_call_target="__snap_u_kernel", called_computations={%pallas_body}
+}
+"""
+
+
+def test_pallas_custom_call_hlo():
+    """Hardware Pallas lowering emits an opaque custom-call whose
+    called_computations the cost walk must NOT traverse (the kernel
+    interior is VMEM work, not HLO work) — but whose result/operand
+    bytes still count as HBM traffic."""
+    from repro.launch.hlo_cost import HloCost
+    hc = HloCost(_PALLAS_CC_HLO)
+    # interior unreachable from ENTRY through counted edges
+    assert hc.mult.get('pallas_body', 0.0) == 0.0
+    got = hc.totals()
+    assert got['flops_elementwise'] == 0      # interior add not counted
+    # custom-call result + operand cross HBM: 2 x 14*128*4 bytes
+    assert got['hbm_bytes'] == 2 * 14 * 128 * 4
+
+
+def test_materialized_broadcast_report():
+    x = jnp.zeros((256,), jnp.float32)
+    compiled = _compile(lambda x: jnp.broadcast_to(x[:, None], (256, 2048)),
+                        x)
+    from repro.launch.hlo_cost import HloCost
+    hc = HloCost(compiled.as_text())
+    hits = hc.materialized_broadcasts(min_bytes=1 << 20)
+    assert hits, 'ROOT broadcast must be reported as materialized'
+    assert hits[0]['dims'] == [256, 2048]
+    assert hits[0]['total_bytes'] == 256 * 2048 * 4
+
+
+def test_dot_summary_scan_multiplier():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+    T = 7
+
+    def fn(x, w):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=T)
+        return h
+
+    from repro.launch.hlo_cost import HloCost
+    hc = HloCost(_compile(fn, x, w).as_text())
+    dots = hc.dot_summary()
+    assert dots
+    total = sum(d['flops'] for d in dots)
+    assert total == pytest.approx(T * 2 * 8 * 64 * 64, rel=1e-6)
+    assert any(d['result_dims'] == [8, 64] and d['mult'] == T
+               for d in dots)
